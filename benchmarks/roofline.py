@@ -1,0 +1,45 @@
+"""§Roofline: report the three-term roofline per (arch x shape x mesh)
+from saved dry-run artifacts (benchmarks never set the 512-device flag
+themselves; run `python -m repro.launch.dryrun --all --json ...` first).
+Falls back to a single live small-arch dry-run subprocess if no
+artifact exists."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+ARTIFACTS = ("artifacts/roofline_single_pod.json",
+             "artifacts/roofline_multi_pod.json")
+
+
+def run(quick: bool = False):
+    found = False
+    for path in ARTIFACTS:
+        if not os.path.exists(path):
+            continue
+        found = True
+        with open(path) as f:
+            reps = json.load(f)
+        print(f"\n### roofline ({path}, {len(reps)} combos)")
+        print("arch,shape,mesh,compute_ms,memory_ms,collective_ms,"
+              "dominant,useful_ratio,mem_gib_per_dev")
+        for r in reps:
+            mem = r.get("peak_memory_per_device") or 0
+            print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{r['t_compute']*1e3:.3f},{r['t_memory']*1e3:.3f},"
+                  f"{r['t_collective']*1e3:.3f},{r['dominant']},"
+                  f"{r['useful_ratio']:.3f},{mem/2**30:.2f}")
+    if not found and not quick:
+        print("no artifacts found; running one live dry-run "
+              "(seamless decode_32k)...")
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "seamless-m4t-large-v2", "--shape", "decode_32k"],
+            env={**os.environ, "PYTHONPATH": "src"}, check=False)
+    return []
+
+
+if __name__ == "__main__":
+    run()

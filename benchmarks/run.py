@@ -1,0 +1,52 @@
+"""Benchmark aggregator: one harness per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (fig3_pareto, fig5_interpretability, roofline,
+                        table1_longproc, table3_longmem, table5_ablation,
+                        table6_throughput, table9_chunked_prefill)
+
+BENCHES = (
+    ("fig3_pareto", fig3_pareto.run),
+    ("table1_longproc", table1_longproc.run),
+    ("table3_longmem", table3_longmem.run),
+    ("table5_ablation", table5_ablation.run),
+    ("table6_throughput", table6_throughput.run),
+    ("table9_chunked_prefill", table9_chunked_prefill.run),
+    ("fig5_interpretability", fig5_interpretability.run),
+    ("roofline", roofline.run),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = []
+    for name, fn in BENCHES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        print(f"\n{'='*72}\n== {name}\n{'='*72}")
+        try:
+            fn(quick=args.quick)
+            print(f"[{name} done in {time.time()-t0:.1f}s]")
+        except Exception:  # noqa: BLE001 — run all, report at end
+            failures.append(name)
+            traceback.print_exc()
+    print(f"\n{'='*72}")
+    if failures:
+        print("FAILED:", ", ".join(failures))
+        raise SystemExit(1)
+    print("all benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

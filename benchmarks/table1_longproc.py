@@ -1,0 +1,29 @@
+"""Table 1/7: long procedural generation under KV budgets (LongProc
+surrogate: the synthetic `procedural` trace task — follow multi-step
+state updates and emit the final trace)."""
+from __future__ import annotations
+
+from benchmarks.common import POLICIES, accuracy, print_table, \
+    trained_system
+
+BUDGETS = (16, 48)
+
+
+def run(quick: bool = False):
+    cfg, params, gates = trained_system()
+    rows = []
+    full = accuracy(cfg, params, gates, policy="full", budget=256,
+                    task="procedural", seq=128)
+    rows.append(("procedural", "full", 256, full))
+    for pol in POLICIES:
+        for M in BUDGETS[:1] if quick else BUDGETS:
+            acc = accuracy(cfg, params, gates, policy=pol, budget=M,
+                           task="procedural", seq=128)
+            rows.append(("procedural", pol, M, acc))
+    print_table("table1_longproc (procedural generation)",
+                ("task", "policy", "budget", "acc"), rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Table 9/10: chunked-prefill evaluation (LocRet setting, paper B.3):
+(surrogate task note: see table3_longmem.py — `procedural` is the
+learned long-recall task at this scale)
+long prompts are prefilled in chunks; the cache is compressed to the
+budget after every chunk. Compare policies with chunked prefill."""
+from __future__ import annotations
+
+from benchmarks.common import accuracy, print_table, trained_system
+
+POLS = ("trimkv", "snapkv", "h2o", "streaming_llm")
+
+
+def run(quick: bool = False):
+    cfg, params, gates = trained_system()
+    rows = []
+    full = accuracy(cfg, params, gates, policy="full", budget=256,
+                    task="procedural", seq=128, chunked=True)
+    rows.append(("full", 256, full, 0.0))
+    for pol in POLS[:2] if quick else POLS:
+        acc = accuracy(cfg, params, gates, policy=pol, budget=32,
+                       task="procedural", seq=128, chunked=True)
+        rows.append((pol, 32, acc, (acc - full) / max(full, 1e-9) * 100))
+    print_table("table9_chunked_prefill",
+                ("policy", "budget", "acc", "delta_vs_full_pct"), rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

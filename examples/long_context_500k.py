@@ -1,0 +1,64 @@
+"""Long-context decode with a bounded cache (the paper's core use case):
+stream a long context through chunked prefill under a fixed budget and
+keep decoding — memory stays O(M) while position counts past the
+window. Also runs the SSM/hybrid archs whose state is natively O(1).
+
+  PYTHONPATH=src python examples/long_context_500k.py \
+      [--arch qwen2.5-14b] [--context 2048] [--budget 64]
+
+(At production scale this is the `long_500k` dry-run shape: 524288-token
+context, 32768-slot cache; here the ratio is kept and the scale reduced
+for CPU.)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import transformer as T
+from repro.serve.engine import build_engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b", choices=ARCH_IDS)
+    ap.add_argument("--context", type=int, default=2048)
+    ap.add_argument("--budget", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    kp, kg = jax.random.split(key)
+    params = T.init_params(kp, cfg)
+    gates = T.init_gate_params(kg, cfg)
+    eng = build_engine(cfg, params, gates, budget=args.budget,
+                       policy="trimkv", prefill_chunk=args.chunk)
+
+    tokens = jax.random.randint(key, (1, args.context), 0, cfg.vocab_size)
+    t0 = time.time()
+    state, h = eng.prefill(tokens, chunked=True)
+    t_prefill = time.time() - t0
+    # cache occupancy: bounded at M regardless of context length
+    if state["layers"] is not None:
+        leaf = jax.tree.map(lambda a: a[0], state["layers"])[0]
+        cache = leaf["cache"] if isinstance(leaf, dict) and "cache" in leaf \
+            else leaf
+        if isinstance(cache, dict) and "pos" in cache:
+            n_alive = int((np.asarray(cache["pos"][0, 0]) >= 0).sum())
+            print(f"context {args.context} -> cache holds {n_alive} "
+                  f"<= M={args.budget} entries (layer0/head0)")
+    out = eng.generate(tokens, args.max_new, chunked=True)
+    print(f"chunked prefill ({args.context} tokens, chunks of "
+          f"{args.chunk}): {t_prefill:.2f}s; decode "
+          f"{out['tok_per_sec']:.1f} tok/s")
+    print(f"per-(layer,head) KV memory: O(M={args.budget}), context "
+          f"grew to {args.context + args.max_new} positions")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: attach TRIM-KV retention gates to a model, train them by
+distillation for a few steps, then serve under a tight KV budget.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, get_smoke_config
+from repro.data import DataConfig
+from repro.data.synthetic import make_batch
+from repro.serve.engine import build_engine
+from repro.train.trainer import train_loop
+
+
+def main():
+    # 1) a small dense model of the paper's family (Qwen3-4B-like,
+    #    reduced to CPU scale). gate_bias_init lowered from the paper's
+    #    18.0 so a 40-step demo visibly moves the gates.
+    cfg = dataclasses.replace(get_smoke_config("trimkv-paper-4b"),
+                              gate_bias_init=2.0)
+    print(f"model: {cfg.num_layers}L d={cfg.d_model} "
+          f"heads={cfg.num_heads}/{cfg.num_kv_heads} trimkv={cfg.trimkv}")
+
+    # 2) distill the retention gates (base model frozen; loss = KL +
+    #    NTP + lambda_cap * capacity hinge, paper Eq. 4-6)
+    train_cfg = TrainConfig(global_batch=8, seq_len=128, capacity_M=16,
+                            lambda_cap=2.0, total_steps=40,
+                            learning_rate=5e-3, warmup_steps=5)
+    data_cfg = DataConfig(batch=8, seq_len=128,
+                          tasks=("copy", "multisession"))
+    state, history = train_loop(cfg, train_cfg, data_cfg, steps=40,
+                                log_every=10)
+
+    # 3) serve with eviction: cache holds at most M=24 tokens per
+    #    (layer, kv head); lowest beta^(t-i) evicted first (Alg. 1)
+    eng = build_engine(cfg, state["params"], state["gates"],
+                       budget=24, policy="trimkv")
+    tokens, labels, _ = make_batch("copy", 7, 4, 128, cfg.vocab_size)
+    acc = eng.teacher_forced_accuracy(tokens, labels)
+    out = eng.generate(jnp.asarray(tokens[:, :64]), 16)
+    print(f"\nbounded-cache (M=24) answer accuracy: {acc:.3f}")
+    print(f"decode throughput: {out['tok_per_sec']:.1f} tok/s "
+          f"(CPU smoke scale)")
+
+    # 4) compare against a recency heuristic at the same budget
+    eng_sl = build_engine(cfg, state["params"], state["gates"],
+                          budget=24, policy="streaming_llm")
+    acc_sl = eng_sl.teacher_forced_accuracy(tokens, labels)
+    print(f"streaming_llm at same budget: {acc_sl:.3f} "
+          f"(TRIM-KV {'>=' if acc >= acc_sl else '<'} recency)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Memory-bounded serving across architectures (deliverable (b)):
+batched requests through chunked prefill + decode with pluggable
+eviction policies, on any assigned architecture.
+
+  PYTHONPATH=src python examples/serve_memory_bounded.py \
+      --arch mixtral-8x7b --policy trimkv --budget 32
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.data.synthetic import make_batch
+from repro.models import transformer as T
+from repro.serve.engine import build_engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b", choices=ARCH_IDS)
+    ap.add_argument("--policy", default="trimkv",
+                    choices=("trimkv", "snapkv", "h2o", "rkv",
+                             "streaming_llm", "keydiff", "full"))
+    ap.add_argument("--budget", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=192)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    kp, kg = jax.random.split(key)
+    params = T.init_params(kp, cfg)
+    gates = T.init_gate_params(kg, cfg)
+
+    extra = {}
+    if cfg.family == "vlm":
+        extra["vision_embeds"] = jax.random.normal(
+            key, (args.batch, cfg.num_image_tokens, cfg.vision_dim)) * 0.1
+    if cfg.family == "encdec":
+        extra["source_embeds"] = jax.random.normal(
+            key, (args.batch, cfg.source_len, cfg.d_model)) * 0.1
+
+    tokens, _, _ = make_batch("multisession", 3, args.batch,
+                              args.prompt_len, cfg.vocab_size)
+    eng = build_engine(cfg, params, gates, budget=args.budget,
+                       policy=args.policy, prefill_chunk=64)
+    out = eng.generate(jnp.asarray(tokens), args.max_new,
+                       extra_inputs=extra or None, chunked=True)
+    kinds = cfg.layer_kinds()
+    n_attn = sum(k in ("global", "local", "cross") for k in kinds)
+    print(f"arch={args.arch} family={cfg.family} "
+          f"({n_attn}/{len(kinds)} layers carry a KV cache)")
+    print(f"policy={args.policy} budget={args.budget}: "
+          f"prefilled {args.prompt_len} tokens in chunks of 64, "
+          f"decoded {args.max_new}")
+    print(f"throughput {out['tok_per_sec']:.1f} tok/s (CPU smoke scale)")
+    print("sample ids:", out["ids"][0][:12])
+    if not cfg.has_attention():
+        print("note: attention-free arch — TRIM-KV inapplicable; state "
+              "is O(1) natively (DESIGN.md §4.1)")
+
+
+if __name__ == "__main__":
+    main()

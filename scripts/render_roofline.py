@@ -1,0 +1,29 @@
+"""Render EXPERIMENTS.md roofline tables from the dry-run JSON artifacts.
+
+  python scripts/render_roofline.py artifacts/roofline_single_pod.json
+"""
+import json
+import sys
+
+
+def main(path):
+    with open(path) as f:
+        reps = json.load(f)
+    print(f"<!-- rendered from {path}: {len(reps)} combos -->")
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | useful | mem GiB/dev |")
+    print("|---|---|---:|---:|---:|---|---:|---:|")
+    for r in reps:
+        mem = (r.get("peak_memory_per_device") or 0) / 2**30
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.2f} | "
+              f"{r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} | "
+              f"{r['dominant']} | {r['useful_ratio']:.3f} | {mem:.1f} |")
+    doms = {}
+    for r in reps:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"\ndominant-term census: {doms}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else
+         "artifacts/roofline_single_pod.json")

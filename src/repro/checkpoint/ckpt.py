@@ -1,0 +1,55 @@
+"""Filesystem pytree checkpointing: one .npz of leaves + a JSON manifest
+of the treedef (path-keyed), atomic via tmp-rename. No orbax offline."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(jax.tree_util.keystr((p,))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    manifest = {"keys": sorted(leaves.keys()), "step": step}
+    tmp = tempfile.mktemp(dir=os.path.dirname(path) or ".")
+    np.savez(tmp + ".npz", **leaves)
+    os.replace(tmp + ".npz", path + ".npz")
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    data = np.load(path + ".npz")
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    paths, treedef = jax.tree_util.tree_flatten(like)[0], \
+        jax.tree_util.tree_structure(like)
+    out = []
+    for path, leaf in flat[0]:
+        key = "/".join(str(jax.tree_util.keystr((p,))) for p in path)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(path: str) -> int | None:
+    try:
+        with open(path + ".json") as f:
+            return json.load(f).get("step")
+    except FileNotFoundError:
+        return None

@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    ModelConfig,
+    ServeConfig,
+    ShapeConfig,
+    TrainConfig,
+    get_config,
+    get_smoke_config,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "ModelConfig",
+    "ServeConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "get_config",
+    "get_smoke_config",
+]

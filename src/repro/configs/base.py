@@ -1,0 +1,187 @@
+"""Config system: dataclass configs for models, training, serving, meshes.
+
+Every assigned architecture gets one module in this package defining
+``CONFIG`` (full production config, cited) and ``smoke()`` (a reduced
+variant of the same family for CPU tests: <=2 layers, d_model<=512,
+<=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+# Layer kinds used in attn_pattern (repeating unit):
+#   "global"     full causal self-attention
+#   "local"      sliding-window causal self-attention (cfg.window)
+#   "recurrent"  RG-LRU recurrent block (hybrid family)
+#   "mamba"      Mamba-1 selective-SSM block (ssm family)
+#   "cross"      self-attention + cross-attention to encoder/vision memory
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | encdec
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    attn_pattern: Tuple[str, ...] = ("global",)
+    window: int = 0                   # local-attn window size
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # --- SSM (mamba-1) ---
+    ssm_state: int = 0
+    d_inner: int = 0
+    conv_width: int = 4
+    dt_rank: int = 0
+    # --- hybrid (RG-LRU) ---
+    lru_width: int = 0
+    # --- VLM ---
+    vision_dim: int = 0
+    num_image_tokens: int = 0
+    # --- enc-dec ---
+    encoder_layers: int = 0
+    source_len: int = 0               # stub frontend sequence length
+    # --- misc ---
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    # --- TRIM-KV (the paper's technique) ---
+    trimkv: bool = True               # attach retention gates to attn layers
+    gate_hidden: int = 512
+    gate_bias_init: float = 18.0      # paper: large positive bias => beta~1 at init
+    # --- dry-run / roofline ---
+    # Unroll the layer-unit lax.scan (and the inner block-streaming
+    # scans of attention / MoE dispatch). XLA's HloCostAnalysis counts a
+    # while body ONCE, so scanned loops under-report FLOPs/bytes/
+    # collectives by their trip counts; the dry-run lowers with
+    # unroll_layers=True so cost_analysis and the HLO collective
+    # schedule are exact. Runtime paths keep the scans (O(1) HLO).
+    unroll_layers: bool = False
+    # attention streaming block sizes (the dry-run enlarges them so the
+    # unrolled cost graphs stay small)
+    attn_q_block: int = 512
+    attn_kv_block: int = 512
+    # Context-parallel attention (§Perf train iteration 2): shard the
+    # full-sequence attention over the "model" mesh axis on the QUERY-
+    # TIME dim via shard_map (k/v replicated — cheap under GQA). Used
+    # when the head count does not divide the model axis, where both
+    # head-TP (resharding storm) and replicated attention (16x mask
+    # work) lose. Enabled by the launch builders; requires a mesh
+    # registered via repro.sharding.set_cp_mesh.
+    context_parallel: bool = False
+    # bookkeeping
+    source: str = ""                  # citation for the config numbers
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so it shards over 16-way TP
+        (Megatron-style). Logits beyond vocab_size are masked to -inf."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Expanded per-layer kind list of length num_layers."""
+        unit = self.attn_pattern
+        out = []
+        while len(out) < self.num_layers:
+            out.extend(unit)
+        return tuple(out[: self.num_layers])
+
+    def has_attention(self) -> bool:
+        return any(k in ("global", "local", "cross") for k in self.layer_kinds())
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 256
+    seq_len: int = 4096
+    learning_rate: float = 2e-4       # paper App. B.1
+    weight_decay: float = 0.01        # paper App. B.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+    capacity_M: int = 256             # paper Sec 5.1: M=256 (math), 1024 (long-ctx)
+    lambda_cap: float = 1.0           # paper Sec 5.1
+    use_kl: bool = True
+    use_ntp: bool = True
+    use_cap: bool = True
+    remat: bool = True
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    budget: int = 1024                # KV budget M per (layer, kv-head)
+    policy: str = "trimkv"            # trimkv|streaming_llm|h2o|snapkv|rkv|keydiff|full
+    sink_tokens: int = 4              # StreamingLLM sinks
+    recent_window: int = 32           # recency floor for heuristic policies
+    obs_window: int = 32              # SnapKV observation window
+    prefill_chunk: int = 2048
+    max_decode_steps: int = 64
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned input shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "recurrentgemma-2b",
+    "mixtral-8x7b",
+    "gemma3-12b",
+    "llama-3.2-vision-90b",
+    "granite-moe-3b-a800m",
+    "falcon-mamba-7b",
+    "qwen2.5-14b",
+    "codeqwen1.5-7b",
+    "seamless-m4t-large-v2",
+    "minitron-8b",
+    # the paper's own base-model scale (Qwen3-4B-like) used in Sec 5
+    "trimkv-paper-4b",
+)
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch_id)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch_id)}")
+    return mod.smoke()

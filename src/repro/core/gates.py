@@ -1,0 +1,42 @@
+"""Retention gates (the paper's learned component).
+
+One gate per transformer block: MLP d_model -> gate_hidden -> n_kv_heads,
+sigmoid squashed, with a large positive learnable bias so that beta ~= 1
+at init (minimal forgetting at the start of training; paper Sec 5.1 /
+App B.4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import LOG_BETA_MIN, dense_apply, dense_init
+
+
+def gate_init(key, d_model: int, hidden: int, n_kv_heads: int,
+              bias_init: float, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": dense_init(k1, d_model, hidden, dtype=dtype),
+        "w2": dense_init(k2, hidden, n_kv_heads, dtype=dtype, scale=0.02),
+        "b": jnp.full((n_kv_heads,), bias_init, jnp.float32),
+    }
+
+
+def gate_logits(p, x):
+    """x: [..., d_model] -> gate pre-sigmoid logits [..., n_kv_heads] f32."""
+    h = jax.nn.silu(dense_apply(p["w1"], x))
+    out = dense_apply(p["w2"], h).astype(jnp.float32) + p["b"]
+    return out
+
+
+def gate_beta(p, x):
+    """Retention score beta in [0, 1]. [..., n_kv_heads] float32."""
+    return jax.nn.sigmoid(gate_logits(p, x))
+
+
+def gate_log_beta(p, x):
+    """log(beta), computed stably as -softplus(-logits), clamped so that
+    beta -> 0 stays finite (evicted immediately but differentiable)."""
+    lg = gate_logits(p, x)
+    return jnp.maximum(-jax.nn.softplus(-lg), LOG_BETA_MIN)

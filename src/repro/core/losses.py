@@ -1,0 +1,170 @@
+"""Training losses (paper Sec 4.2, Eqs. 4-6).
+
+L = L_KL + L_NTP + lambda_cap * L_cap
+  L_KL  : forward KL(teacher || student) over the vocab, token-averaged
+  L_NTP : next-token cross-entropy of the gated student
+  L_cap : hinge on effective cache occupancy S_t = sum_{i<=t} beta_i^{t-i}
+          (per layer & kv-head): (1/T) sum_t (1/t) max(0, S_t - M)
+
+The vocab-heavy losses are computed in chunks over time under
+jax.checkpoint so full [B, T, V] logits are never live (critical at
+vocab 256k on a 16 GB chip).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _log_softmax(x):
+    return jax.nn.log_softmax(x.astype(jnp.float32), axis=-1)
+
+
+def kl_and_ntp_from_hidden(h_student, h_teacher, unembed, labels, *,
+                           vocab_size: int, chunk: int = 256,
+                           use_kl: bool = True, use_ntp: bool = True):
+    """Chunked-over-time forward-KL + next-token CE.
+
+    h_*: [B, T, d]; unembed: {"w": [d, Vp]}; labels: [B, T] (next tokens,
+    -1 = pad/ignored). Logits above vocab_size are masked.
+    Returns (kl_mean, ntp_mean) scalars (per-valid-token averages).
+    """
+    B, T, _ = h_student.shape
+    Vp = unembed["w"].shape[-1]
+    n_chunks = -(-T // chunk)
+    pad = n_chunks * chunk - T
+    if pad:
+        h_student = jnp.pad(h_student, ((0, 0), (0, pad), (0, 0)))
+        h_teacher = jnp.pad(h_teacher, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hs = h_student.reshape(B, n_chunks, chunk, -1)
+    ht = h_teacher.reshape(B, n_chunks, chunk, -1)
+    lb = labels.reshape(B, n_chunks, chunk)
+    vocab_mask = (jnp.arange(Vp) < vocab_size)
+
+    @jax.checkpoint
+    def one_chunk(hs_c, ht_c, lb_c):
+        w = unembed["w"]
+        logit_s = (hs_c @ w).astype(jnp.float32)
+        logit_s = jnp.where(vocab_mask, logit_s, -1e30)
+        logp_s = _log_softmax(logit_s)
+        valid = (lb_c >= 0)
+        n_valid = jnp.sum(valid)
+        kl = jnp.zeros((), jnp.float32)
+        if use_kl:
+            logit_t = (ht_c @ w).astype(jnp.float32)
+            logit_t = jnp.where(vocab_mask, logit_t, -1e30)
+            logp_t = _log_softmax(logit_t)
+            p_t = jnp.exp(logp_t)
+            kl_tok = jnp.sum(p_t * (logp_t - logp_s), axis=-1)
+            kl = jnp.sum(jnp.where(valid, kl_tok, 0.0))
+        ntp = jnp.zeros((), jnp.float32)
+        if use_ntp:
+            lb_safe = jnp.maximum(lb_c, 0)
+            ce_tok = -jnp.take_along_axis(
+                logp_s, lb_safe[..., None], axis=-1)[..., 0]
+            ntp = jnp.sum(jnp.where(valid, ce_tok, 0.0))
+        return kl, ntp, n_valid
+
+    def body(carry, i):
+        kl, ntp, n = one_chunk(hs[:, i], ht[:, i], lb[:, i])
+        return (carry[0] + kl, carry[1] + ntp, carry[2] + n), None
+
+    (kl_sum, ntp_sum, n_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.int32)), jnp.arange(n_chunks))
+    denom = jnp.maximum(n_sum, 1).astype(jnp.float32)
+    return kl_sum / denom, ntp_sum / denom
+
+
+def capacity_loss_ref(beta, M: float):
+    """O(T^2)-memory oracle. beta: [B, T, H] in [0,1].
+    Returns scalar mean over (B, H) of (1/T) sum_t (1/t) max(0, S_t - M).
+    """
+    B, T, H = beta.shape
+    b = jnp.moveaxis(beta, 1, 2).astype(jnp.float32)          # [B,H,T]
+    t_idx = jnp.arange(T)
+    dist = t_idx[:, None] - t_idx[None, :]                    # t - i
+    causal = dist >= 0
+    logb = jnp.log(jnp.maximum(b, 1e-30))
+    expo = dist[None, None].astype(jnp.float32) * \
+        logb[:, :, None, :]                                   # [B,H,T,T]
+    expo = jnp.where(causal[None, None], expo, -1e9)          # pre-exp mask
+    pw = jnp.exp(expo)
+    S = jnp.sum(pw, axis=-1)                                  # [B,H,T]
+    inv_t = 1.0 / (t_idx + 1).astype(jnp.float32)
+    loss_bh = jnp.mean(jnp.maximum(S - M, 0.0) * inv_t, axis=-1)
+    return jnp.mean(loss_bh)
+
+
+def capacity_loss_chunked(beta, M: float, *, block: int = 256,
+                          log_beta=None):
+    """Memory-efficient capacity loss: tiles the (t, i) triangle in
+    `block`-sized chunks, never materializing T x T. Same math as
+    capacity_loss_ref. beta: [B, T, H].
+
+    Pass `log_beta` when available (the gates compute it natively):
+    log(exp(log_beta)) has gradient 1/beta -> 1e30 as beta -> the e^-80
+    clamp, which overflows the global grad norm to inf and turns the
+    clip into NaN (observed at the moment training first satisfies the
+    budget). The log-space path has bounded gradients throughout.
+    """
+    B, T, H = beta.shape
+    n_blk = -(-T // block)
+    pad = n_blk * block - T
+    if log_beta is not None:
+        b = jnp.moveaxis(log_beta, 1, 2).astype(jnp.float32)  # [B,H,T]
+        if pad:
+            # pad in log space with -inf-ish (zero contribution)
+            b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=-80.0)
+        logb = b
+    else:
+        b = jnp.moveaxis(beta, 1, 2).astype(jnp.float32)      # [B,H,T]
+        if pad:
+            b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)))
+        logb = jnp.log(jnp.maximum(b, 1e-30))                 # [B,H,Tp]
+    logb_blocks = logb.reshape(B, H, n_blk, block)
+    t_valid = (jnp.arange(n_blk * block) < T).reshape(n_blk, block)
+
+    @jax.checkpoint
+    def row_block(ti):
+        """Occupancy S_t for t in block ti, summing over i-blocks 0..ti."""
+        t_pos = ti * block + jnp.arange(block)                # [bt]
+
+        def col_step(S, ii):
+            i_pos = ii * block + jnp.arange(block)            # [bi]
+            lb = jax.lax.dynamic_index_in_dim(
+                logb_blocks, ii, axis=2, keepdims=False)      # [B,H,bi]
+            dist = t_pos[:, None] - i_pos[None, :]            # [bt,bi]
+            mask = (dist >= 0) & (i_pos[None, :] < T)
+            # mask BEFORE exp: the upper triangle has dist<0, logb<0 ->
+            # exp(+big) = inf, and inf x 0 in the where backward is NaN
+            # (this exact NaN killed gate training at the step the
+            # budget was first satisfied)
+            expo = dist[None, None].astype(jnp.float32) * \
+                lb[:, :, None, :]
+            expo = jnp.where(mask[None, None], expo, -1e9)
+            pw = jnp.exp(expo)
+            return S + jnp.sum(pw, axis=-1), None
+
+        S0 = jnp.zeros((B, H, block), jnp.float32)
+        # scan all column blocks; the (dist >= 0) mask zeroes the upper
+        # triangle (ti is traced, so the trip count must be static).
+        S, _ = jax.lax.scan(col_step, S0, jnp.arange(n_blk))
+        inv_t = 1.0 / (t_pos + 1).astype(jnp.float32)
+        contrib = jnp.maximum(S - M, 0.0) * inv_t
+        contrib = jnp.where(t_pos < T, contrib, 0.0)
+        return jnp.sum(contrib, axis=-1)                      # [B,H]
+
+    # NOTE: upper-triangular work per row-block varies with ti; scan pays
+    # the max everywhere. Acceptable: total work is the same O(T^2/2)
+    # when XLA hoists, and the Pallas kernel does the exact triangle.
+    def body(acc, ti):
+        return acc + row_block(ti), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((B, H), jnp.float32),
+                          jnp.arange(n_blk))
+    return jnp.mean(acc) / T

@@ -1,0 +1,187 @@
+"""Eviction policies over the bounded slot cache.
+
+Every policy exposes:
+  keep_scores(cache, t) -> [B, Hkv, M]  higher = keep; empty slots -inf.
+  chunk_scores(...)     -> keep scores for freshly-prefilled chunk tokens.
+  decode_update(cache, probs) -> cache  (accumulate attention aux).
+  needs_attn: whether the engine must hand decode attention probs to
+  decode_update (TRIM-KV / StreamingLLM don't -> cheaper decode path;
+  H2O / R-KV / SnapKV do — this asymmetry is the paper's Table 6 claim).
+
+Baselines implemented per the papers cited in TRIM-KV Sec 5:
+  StreamingLLM (Xiao+23): sinks + recency.
+  H2O (Zhang+23): accumulated attention mass + recency floor.
+  SnapKV (Li+24c): obs-window pooled attention at prefill, recency decode.
+  R-KV (Cai+25): attention importance + key-diversity redundancy.
+  KeyDiff (Park+25): pure key diversity.
+  FullKV: no eviction (budget must cover the sequence).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # local copy; avoids core<->models circular import
+
+BIG = 1e30
+
+
+def _mask_empty(scores, pos):
+    return jnp.where(pos >= 0, scores, NEG_INF)
+
+
+def _key_diversity(k, pos):
+    """Negative max cosine similarity to any other cached key.
+    k: [B,H,M,D] -> [B,H,M]; higher = more diverse = keep."""
+    kf = k.astype(jnp.float32)
+    kn = kf / (jnp.linalg.norm(kf, axis=-1, keepdims=True) + 1e-6)
+    sim = jnp.einsum("bhmd,bhnd->bhmn", kn, kn)
+    valid = (pos >= 0)
+    pair_ok = valid[..., None, :] & valid[..., :, None]
+    eye = jnp.eye(sim.shape[-1], dtype=bool)
+    sim = jnp.where(pair_ok & ~eye, sim, -1.0)
+    return -jnp.max(sim, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str = "base"
+    needs_attn: bool = False
+    recent_window: int = 32
+    sink_tokens: int = 4
+
+    def keep_scores(self, cache, t):
+        raise NotImplementedError
+
+    def chunk_scores(self, *, pos_c, beta_c, aux_c, k_c, t):
+        """Default: score chunk tokens with the same formula as cached
+        ones, by building a pseudo-cache."""
+        pseudo = {"pos": pos_c, "beta": beta_c, "aux": aux_c, "k": k_c}
+        return self.keep_scores(pseudo, t)
+
+    def decode_update(self, cache, probs_kv):
+        return cache
+
+
+@dataclasses.dataclass(frozen=True)
+class TrimKV(Policy):
+    """The paper: keep score = beta_j^(t - pos_j) (Alg. 1 argmin)."""
+    name: str = "trimkv"
+
+    def keep_scores(self, cache, t):
+        dist = (t - cache["pos"]).astype(jnp.float32)
+        logb = jnp.log(jnp.maximum(cache["beta"], 1e-30))
+        return _mask_empty(jnp.exp(dist * logb), cache["pos"])
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingLLM(Policy):
+    name: str = "streaming_llm"
+
+    def keep_scores(self, cache, t):
+        pos = cache["pos"]
+        s = pos.astype(jnp.float32)                 # newer = keep
+        s = jnp.where(pos < self.sink_tokens, BIG, s)
+        return _mask_empty(s, pos)
+
+
+@dataclasses.dataclass(frozen=True)
+class H2O(Policy):
+    """Heavy-hitter oracle: accumulated attention mass (aux) + recency."""
+    name: str = "h2o"
+    needs_attn: bool = True
+
+    def keep_scores(self, cache, t):
+        pos = cache["pos"]
+        s = cache["aux"]
+        recent = (t - pos) < self.recent_window
+        s = jnp.where(recent, BIG, s)
+        return _mask_empty(s, pos)
+
+    def decode_update(self, cache, probs_kv):
+        new = dict(cache)
+        new["aux"] = cache["aux"] + probs_kv
+        return new
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapKV(Policy):
+    """Prefill: keep tokens most attended by the obs-window queries
+    (aux = pooled obs attention, set by the engine). Decode: recency."""
+    name: str = "snapkv"
+    needs_attn: bool = True
+
+    def keep_scores(self, cache, t):
+        pos = cache["pos"]
+        recent = (t - pos) < self.recent_window
+        s = jnp.where(recent, BIG + pos.astype(jnp.float32), cache["aux"])
+        return _mask_empty(s, pos)
+
+
+@dataclasses.dataclass(frozen=True)
+class RKV(Policy):
+    """R-KV: lam * attention-importance + (1-lam) * key-diversity."""
+    name: str = "rkv"
+    needs_attn: bool = True
+    rkv_lambda: float = 0.5
+
+    def _combine(self, imp, div, pos, t):
+        def norm01(x):
+            lo = jnp.min(jnp.where(pos >= 0, x, BIG), axis=-1, keepdims=True)
+            hi = jnp.max(jnp.where(pos >= 0, x, -BIG), axis=-1, keepdims=True)
+            return (x - lo) / jnp.maximum(hi - lo, 1e-6)
+        s = self.rkv_lambda * norm01(imp) + (1 - self.rkv_lambda) * norm01(div)
+        recent = (t - pos) < self.recent_window
+        s = jnp.where(recent, BIG, s)
+        return _mask_empty(s, pos)
+
+    def keep_scores(self, cache, t):
+        div = _key_diversity(cache["k"], cache["pos"])
+        return self._combine(cache["aux"], div, cache["pos"], t)
+
+    def decode_update(self, cache, probs_kv):
+        new = dict(cache)
+        new["aux"] = cache["aux"] + probs_kv
+        return new
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyDiff(Policy):
+    """Query-agnostic key-diversity eviction (paper App. B compares)."""
+    name: str = "keydiff"
+
+    def keep_scores(self, cache, t):
+        pos = cache["pos"]
+        div = _key_diversity(cache["k"], pos)
+        recent = (t - pos) < self.recent_window
+        return _mask_empty(jnp.where(recent, BIG, div), pos)
+
+
+@dataclasses.dataclass(frozen=True)
+class FullKV(Policy):
+    """No eviction: keep score = position+2 so the oldest is evicted only
+    on true overflow (budget should cover the whole sequence)."""
+    name: str = "full"
+
+    def keep_scores(self, cache, t):
+        return _mask_empty(cache["pos"].astype(jnp.float32) + 2.0,
+                           cache["pos"])
+
+
+POLICIES = {
+    "trimkv": TrimKV,
+    "streaming_llm": StreamingLLM,
+    "h2o": H2O,
+    "snapkv": SnapKV,
+    "rkv": RKV,
+    "keydiff": KeyDiff,
+    "full": FullKV,
+}
+
+
+def make_policy(serve_cfg) -> Policy:
+    cls = POLICIES[serve_cfg.policy]
+    return cls(recent_window=serve_cfg.recent_window,
+               sink_tokens=serve_cfg.sink_tokens)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import DataConfig, batches
+from repro.data.synthetic import TASKS, make_batch
+
+__all__ = ["DataConfig", "batches", "TASKS", "make_batch"]

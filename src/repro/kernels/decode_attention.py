@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: flash-decode over the bounded slot cache.
+
+One query token attends to the M-slot cache (slot-dense layout, empty
+slots masked by pos < 0; optional sliding-window mask). This is the
+TRIM-KV serving hot path: O(M) per step regardless of context length —
+the structural basis of the paper's Table 6 throughput claim.
+
+Grid: (B*Hq, n_m) with online-softmax accumulation across the slot
+blocks in VMEM scratch. GQA via index-map aliasing (bh // group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, t_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, m_block, n_m, window, M):
+    mi = pl.program_id(1)
+
+    @pl.when(mi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                        # [1, D]
+    k = k_ref[0].astype(jnp.float32)                        # [bm, D]
+    v = v_ref[0].astype(jnp.float32)
+    pos = pos_ref[0]                                        # [bm] int32
+    t = t_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [1, bm]
+    s = s / np.sqrt(q.shape[-1])
+    slot = mi * m_block + jax.lax.broadcasted_iota(jnp.int32, (1, m_block), 1)
+    ok = (pos[None, :] >= 0) & (slot < M)
+    if window > 0:
+        ok = ok & ((t - pos[None, :]) < window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(mi == n_m - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q_t, k_cache, v_cache, pos, t, *, window=0,
+                            m_block=512, interpret=True):
+    """q_t: [B,Hq,D]; k_cache/v_cache: [B,Hkv,M,D]; pos: [B,Hkv,M] int32
+    (-1 empty); t: scalar current position. Returns [B,Hq,D] (q dtype)."""
+    B, Hq, D = q_t.shape
+    Hkv, M = k_cache.shape[1], k_cache.shape[2]
+    group = Hq // Hkv
+
+    qh = q_t.reshape(B * Hq, 1, D)
+    kh = k_cache.reshape(B * Hkv, M, D)
+    vh = v_cache.reshape(B * Hkv, M, D)
+    ph = pos.reshape(B * Hkv, M)
+    m_block = min(m_block, max(M, 8))
+    n_m = -(-M // m_block)
+    pad = n_m * m_block - M
+    if pad:
+        kh = jnp.pad(kh, ((0, 0), (0, pad), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad), (0, 0)))
+        ph = jnp.pad(ph, ((0, 0), (0, pad)), constant_values=-1)
+    t_arr = jnp.full((1,), t, jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, m_block=m_block, n_m=n_m,
+                               window=window, M=M)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, n_m),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda bh, mi: (bh, 0, 0)),
+            pl.BlockSpec((1, m_block, D), lambda bh, mi: (bh // group, mi, 0)),
+            pl.BlockSpec((1, m_block, D), lambda bh, mi: (bh // group, mi, 0)),
+            pl.BlockSpec((1, m_block), lambda bh, mi: (bh // group, mi)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda bh, mi: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, 1, D), q_t.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh, ph, t_arr)
+    return out.reshape(B, Hq, D)

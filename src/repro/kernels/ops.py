@@ -1,0 +1,73 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+`impl` selection:
+  "pallas"  — the TPU kernel (interpret=True on CPU; compiled on TPU)
+  "ref"     — pure-jnp oracle
+  "xla"     — the chunked XLA path used by the production train/dry-run
+              graphs (differentiable, memory-bounded; DESIGN.md §2)
+  "auto"    — "pallas" when running on TPU, else "xla"
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.capacity_loss import capacity_loss_pallas
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.retention_attention import retention_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def retention_attention(q, k, v, log_beta=None, *, causal=True, window=0,
+                        impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "pallas":
+        return retention_attention_pallas(q, k, v, log_beta, causal=causal,
+                                          window=window,
+                                          interpret=_interpret())
+    if impl == "ref":
+        return _ref.retention_attention_ref(q, k, v, log_beta,
+                                            causal=causal, window=window)
+    if impl == "xla":
+        from repro.models.common import chunked_attention
+        return chunked_attention(q, k, v, log_beta=log_beta, causal=causal,
+                                 window=window)
+    raise ValueError(impl)
+
+
+def capacity_loss(beta, M: float, *, impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "pallas":
+        return capacity_loss_pallas(beta, M, interpret=_interpret())
+    if impl == "ref":
+        return _ref.capacity_loss_ref(beta, M)
+    if impl == "xla":
+        from repro.core.losses import capacity_loss_chunked
+        return capacity_loss_chunked(beta, M)
+    raise ValueError(impl)
+
+
+def decode_attention(q_t, k_cache, v_cache, pos, t, *, window=0,
+                     impl="auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "pallas":
+        return decode_attention_pallas(q_t, k_cache, v_cache, pos, t,
+                                       window=window,
+                                       interpret=_interpret())
+    if impl == "ref":
+        return _ref.decode_attention_ref(q_t, k_cache, v_cache, pos, t,
+                                         window=window)
+    raise ValueError(impl)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose
+against these across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def retention_attention_ref(q, k, v, log_beta=None, *, causal=True,
+                            window=0):
+    """q: [B,Tq,Hq,D]; k,v: [B,Tk,Hkv,D]; log_beta: [B,Tk,Hkv]|None."""
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / np.sqrt(D)
+    dist = jnp.arange(Tq)[:, None] - jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask = mask & (dist >= 0)
+    if window > 0:
+        mask = mask & (dist < window)
+    if log_beta is not None:
+        lb = jnp.repeat(log_beta, group, axis=2).astype(jnp.float32)
+        bias = dist[None, None].astype(jnp.float32) * \
+            jnp.moveaxis(lb, 1, 2)[:, :, None, :]
+        s = s + jnp.where(mask[None, None], bias, 0.0)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def capacity_loss_ref(beta, M: float):
+    """beta: [B,T,H] -> scalar (see core.losses.capacity_loss_ref)."""
+    B, T, H = beta.shape
+    b = jnp.moveaxis(beta, 1, 2).astype(jnp.float32)
+    t_idx = jnp.arange(T)
+    dist = t_idx[:, None] - t_idx[None, :]
+    logb = jnp.log(jnp.maximum(b, 1e-30))
+    expo = dist[None, None].astype(jnp.float32) * logb[:, :, None, :]
+    # mask BEFORE exp: dist<0 x logb<0 -> exp(+big) = inf upstream of a
+    # where is an inf*0=NaN in the backward (same fix as core.losses)
+    expo = jnp.where((dist >= 0)[None, None], expo, -1e9)
+    pw = jnp.exp(expo)
+    S = jnp.sum(pw, axis=-1)
+    inv_t = 1.0 / (t_idx + 1).astype(jnp.float32)
+    return jnp.mean(jnp.mean(jnp.maximum(S - M, 0.0) * inv_t, axis=-1))
+
+
+def decode_attention_ref(q_t, k_cache, v_cache, pos, t, *, window=0):
+    """q_t: [B,Hq,D]; caches [B,Hkv,M,D]; pos [B,Hkv,M]."""
+    B, Hq, D = q_t.shape
+    Hkv, M = k_cache.shape[1], k_cache.shape[2]
+    group = Hq // Hkv
+    k = jnp.repeat(k_cache, group, axis=1).astype(jnp.float32)
+    v = jnp.repeat(v_cache, group, axis=1).astype(jnp.float32)
+    ok = pos >= 0
+    if window > 0:
+        ok = ok & ((t - pos) < window)
+    valid = jnp.repeat(ok, group, axis=1)
+    s = jnp.einsum("bhd,bhmd->bhm", q_t.astype(jnp.float32), k) / np.sqrt(D)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid, p, 0.0)
+    out = jnp.einsum("bhm,bhmd->bhd", p, v)
+    return out.astype(q_t.dtype)

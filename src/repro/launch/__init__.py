@@ -1,0 +1,10 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import repro.launch.dryrun from library code — it sets
+XLA_FLAGS for 512 host devices at import time (by design)."""
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                               make_host_mesh, make_production_mesh,
+                               num_chips)
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "make_host_mesh",
+           "make_production_mesh", "num_chips"]

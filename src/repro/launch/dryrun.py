@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers, SPMD-partitions, and compiles on the production mesh
+— and extract its roofline terms (deliverables (e) + (g)).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+      --shape decode_32k [--multi-pod] [--json out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The XLA_FLAGS line above MUST stay the first statement: jax fixes the
+device count at first backend init. Smoke tests / benches never import
+this module, so they see the single real CPU device.
+
+## Cost methodology (loop-linear extrapolation)
+
+XLA's HloCostAnalysis counts a `while` body ONCE, so a lax.scan over R
+layer-units under-reports FLOPs / bytes / collective traffic by ~R.
+Fully unrolling the production graphs is not compilable in reasonable
+time on this container's single core. Instead each combo does THREE
+compiles:
+
+  1. the FULL production graph (layers scanned)  -> lowering proof +
+     memory_analysis (the thing that must fit in HBM);
+  2. the same step with num_layers = 1 unit, unrolled;
+  3. with num_layers = 2 units, unrolled;
+
+and extrapolates cost(R) = cost_1 + (R-1) * (cost_2 - cost_1) for
+FLOPs, bytes and per-collective wire bytes. Layer units are exactly
+homogeneous (same HLO per unit), so the extrapolation is exact up to
+XLA fusion differences at the unit boundary. Residual undercount: the
+block-streaming loops INSIDE attention / capacity-loss (counted once
+per body) — reported separately via the analytic attention term.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh, num_chips
+from repro.launch import specs as S
+from repro.roofline import analyze, useful_flops, HEADER
+from repro.roofline.analysis import collective_bytes, RooflineReport
+from repro.roofline.flops import moe_group_flops
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def _compile(cfg, shape, mesh, kw, donate=None):
+    fn, args, in_sh, donate_idx = S.build(cfg, shape, mesh, **kw)
+    jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate_idx)
+    lowered = jitted.lower(*args)
+    return lowered.compile()
+
+
+def _cost(compiled, chips):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = collective_bytes(compiled.as_text(), chips)
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)), coll)
+
+
+def _with_layers(cfg, n_units: int):
+    u = len(cfg.attn_pattern)
+    # enlarge streaming blocks so the unrolled cost graphs stay small
+    # (these compiles are analyzed, never executed; the memory proof
+    # comes from the full production compile)
+    kw = {"num_layers": n_units * u, "unroll_layers": True,
+          "attn_q_block": 4096, "attn_kv_block": 4096}
+    if cfg.encoder_layers:
+        # scale the encoder with the decoder so the per-unit cost term
+        # includes the encoder's share (seamless: 24 enc : 24 dec)
+        per_unit = max(round(cfg.encoder_layers /
+                             (cfg.num_layers // u)), 1)
+        kw["encoder_layers"] = n_units * per_unit
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            policy: str = "trimkv", verbose: bool = True,
+            budget: int | None = None, skip_extrapolation: bool = False):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_desc = "x".join(str(s) for s in mesh.shape.values())
+    chips = num_chips(mesh)
+    kw = {}
+    if shape.kind != "train":
+        kw["policy_name"] = policy
+        if budget is not None:
+            kw["budget"] = budget
+    used_budget = kw.get("budget", S.DECODE_BUDGET
+                         if shape.kind == "decode" else S.PREFILL_BUDGET)
+    # 1) full production graph: the lowering/compile/memory proof
+    t0 = time.time()
+    with mesh:
+        compiled_full = _compile(cfg, shape, mesh, kw)
+    t_full = time.time() - t0
+    ma = compiled_full.memory_analysis()
+
+    # 2+3) loop-linear cost extrapolation
+    U = len(cfg.attn_pattern)
+    R = cfg.num_layers // U
+    if skip_extrapolation or R <= 2:
+        flops, nbytes, coll = _cost(compiled_full, chips)
+        if R > 2:
+            pass
+    else:
+        with mesh:
+            c1 = _compile(_with_layers(cfg, 1), shape, mesh, kw)
+            c2 = _compile(_with_layers(cfg, 2), shape, mesh, kw)
+        f1, b1, coll1 = _cost(c1, chips)
+        f2, b2, coll2 = _cost(c2, chips)
+        # clamp: XLA occasionally optimizes the 2-unit graph harder than
+        # the 1-unit one, which would extrapolate negative
+        flops = max(f1 + (R - 1) * (f2 - f1), f2)
+        nbytes = max(b1 + (R - 1) * (b2 - b1), b2)
+        keys = set(coll1) | set(coll2)
+        coll = {k: coll1.get(k, 0.0) +
+                (R - 1) * (coll2.get(k, 0.0) - coll1.get(k, 0.0))
+                for k in keys}
+    t_extra = time.time() - t0 - t_full
+
+    # analytic residual for the MoE group scan (counted once per body;
+    # unrolling its 512 bodies is not compilable here — DESIGN.md §4.2)
+    if cfg.num_experts and shape.kind != "decode" and \
+            not skip_extrapolation:
+        n_tok = shape.global_batch * shape.seq_len
+        passes = 4.0 if shape.kind == "train" else 1.0  # teacher+fwd+bwd
+        moe_total = moe_group_flops(cfg, n_tok) * passes
+        n_groups = max(n_tok // 2048, 1)
+        flops += moe_total / chips * (1.0 - 1.0 / n_groups)
+
+    coll_total = sum(max(v, 0.0) for k, v in coll.items()
+                     if not k.startswith("_"))
+    params, _ = S.model_shapes(cfg)
+    mf = useful_flops(cfg, shape, params,
+                      budget=used_budget if shape.kind == "decode" else 0)
+    rep = RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_desc, chips=chips,
+        hlo_flops=flops, hlo_bytes=nbytes, coll_bytes=coll_total,
+        coll_breakdown=coll,
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=nbytes / HBM_BW,
+        t_collective=coll_total / ICI_BW,
+        model_flops=mf,
+        peak_memory_per_device=float(ma.temp_size_in_bytes +
+                                     ma.argument_size_in_bytes +
+                                     ma.output_size_in_bytes))
+    if verbose:
+        print(f"== {arch} x {shape_name} x mesh {mesh_desc} "
+              f"(full compile {t_full:.1f}s, extrapolation {t_extra:.1f}s)")
+        print(f"   memory/device: args {ma.argument_size_in_bytes/2**30:.2f}"
+              f" GiB, temp {ma.temp_size_in_bytes/2**30:.2f} GiB, "
+              f"out {ma.output_size_in_bytes/2**30:.2f} GiB")
+        print(f"   cost/chip: {rep.hlo_flops:.3e} FLOP, "
+              f"{rep.hlo_bytes:.3e} B, {rep.coll_bytes:.3e} wire-B")
+        print(f"   roofline: compute {rep.t_compute*1e3:.3f} ms | "
+              f"memory {rep.t_memory*1e3:.3f} ms | "
+              f"collective {rep.t_collective*1e3:.3f} ms "
+              f"-> {rep.dominant}-bound, useful={rep.useful_ratio:.3f}")
+        sys.stdout.flush()
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch subset (with --all shapes)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--policy", default="trimkv")
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the R=1/R=2 extrapolation compiles "
+                         "(memory/lowering proof only)")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    combos = []
+    if args.all or args.archs:
+        archs = args.archs.split(",") if args.archs else ARCH_IDS
+        shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+        for a in archs:
+            for s in shapes:
+                combos.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("need --arch and --shape (or --all / --archs)")
+        combos = [(args.arch, args.shape)]
+
+    reports, failures = [], []
+    print(HEADER)
+    for a, s in combos:
+        try:
+            reports.append(run_one(
+                a, s, multi_pod=args.multi_pod, policy=args.policy,
+                budget=args.budget, skip_extrapolation=args.fast))
+            print(reports[-1].row())
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures.append((a, s, repr(e)))
+            traceback.print_exc()
+        sys.stdout.flush()
+        if args.json:                        # incremental save
+            with open(args.json, "w") as f:
+                json.dump([r.to_dict() for r in reports], f, indent=1)
+    print(f"\n{len(reports)} ok, {len(failures)} failed")
+    for a, s, e in failures:
+        print(f"FAIL {a} x {s}: {e}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production meshes (DESIGN.md §5).
+
+Functions, not module constants: importing this module must never touch
+jax device state (smoke tests run with 1 CPU device; only dryrun.py sets
+XLA_FLAGS for 512 host devices).
+
+Hardware model (TPU v5e-class, used by the roofline):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+SINGLE_POD = (16, 16)        # 256 chips
+MULTI_POD = (2, 16, 16)      # 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh over the single local device (smoke scale)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def num_chips(mesh) -> int:
+    n = 1
+    for s in mesh.shape.values():
+        n *= s
+    return n

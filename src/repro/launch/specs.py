@@ -1,0 +1,202 @@
+"""ShapeDtypeStruct input specs + step-fn builders for the dry-run.
+
+Per input shape (DESIGN.md §4.1):
+  train_4k     lowers the distillation train_step (gates trainable).
+  prefill_32k  lowers single-shot prefill into the bounded cache.
+  decode_32k   lowers decode_step: ONE token over a 32k-slot cache.
+  long_500k    lowers decode_step at t=524288. Attention archs use the
+               TRIM-KV bounded cache (M=32768 slots) — the sub-quadratic
+               variant the paper provides; SSM/hybrid state is native
+               O(1). No arch skips this shape.
+
+Everything here is ShapeDtypeStruct-only: no device allocation ever
+happens for the full-size configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (INPUT_SHAPES, ModelConfig, ServeConfig,
+                           ShapeConfig, TrainConfig, get_config)
+from repro.core.policies import make_policy
+from repro.models import transformer as T
+from repro.models.common import to_dtype
+from repro.sharding import (attn_tp_flags, batch_shardings,
+                            param_shardings, replicated, set_cp_mesh,
+                            state_shardings, train_state_shardings)
+from repro.train.distill import distill_loss, train_step
+from repro.optim import AdamWConfig, cosine_schedule, init_opt_state
+
+# Bounded-cache budget used by the decode dry-runs (per layer, kv-head):
+# decode_32k budget == its context (cache exactly covers the sequence);
+# long_500k uses the paper's memory-bounded regime, M << T.
+DECODE_BUDGET = 32768
+PREFILL_BUDGET = 4096
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def extra_input_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    """Stub modality frontends (the one allowed stub): precomputed
+    patch/frame embeddings of the right shape."""
+    extra = {}
+    if cfg.family == "vlm":
+        extra["vision_embeds"] = _sds(
+            (batch, cfg.num_image_tokens, cfg.vision_dim), jnp.bfloat16)
+    if cfg.family == "encdec":
+        extra["source_embeds"] = _sds(
+            (batch, cfg.source_len, cfg.d_model), jnp.bfloat16)
+    return extra
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, L = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": _sds((B, L), jnp.int32),
+                 "lm_labels": _sds((B, L), jnp.int32)}
+        specs.update(extra_input_specs(cfg, B))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, L), jnp.int32)}
+        specs.update(extra_input_specs(cfg, B))
+        return specs
+    # decode: ONE new token against a state whose caches hold the context
+    specs = {"token": _sds((B,), jnp.int32)}
+    return specs
+
+
+def model_shapes(cfg: ModelConfig):
+    """(params, gates) as ShapeDtypeStructs via eval_shape (no alloc)."""
+    params = jax.eval_shape(
+        functools.partial(T.init_params, cfg=cfg), jax.random.key(0))
+    gates = jax.eval_shape(
+        functools.partial(T.init_gate_params, cfg=cfg), jax.random.key(0))
+    return params, gates
+
+
+def decode_state_shapes(cfg: ModelConfig, batch: int, budget: int):
+    return jax.eval_shape(
+        lambda: T.init_decode_state(cfg, batch, budget))
+
+
+def param_count(tree) -> int:
+    import numpy as np
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+# -------------------------------------------------------------- builders
+#
+# Each builder returns (fn, args_tuple, in_shardings_tuple). `fn` takes
+# exactly the traced args; cfg/policy/etc. are closed over (static).
+
+
+def _maybe_context_parallel(cfg, mesh):
+    """Context-parallel attention when q heads don't divide the model
+    axis (head-TP reshards every layer; replicated attention multiplies
+    the mask work by the axis size — both measured losses, §Perf)."""
+    import dataclasses
+    q_tp, _ = attn_tp_flags(cfg, mesh)
+    if q_tp or not cfg.has_attention():
+        return cfg
+    set_cp_mesh(mesh)
+    return dataclasses.replace(cfg, context_parallel=True)
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    cfg = _maybe_context_parallel(cfg, mesh)
+    train_cfg = TrainConfig(global_batch=shape.global_batch,
+                            seq_len=shape.seq_len, remat=True)
+    opt_cfg = AdamWConfig(
+        lr=cosine_schedule(train_cfg.learning_rate, train_cfg.warmup_steps,
+                           train_cfg.total_steps),
+        weight_decay=train_cfg.weight_decay,
+        grad_clip=train_cfg.grad_clip)
+    params, gates = model_shapes(cfg)
+    opt = jax.eval_shape(init_opt_state, gates)
+    state = {"params": params, "gates": gates, "opt": opt}
+    batch = input_specs(cfg, shape)
+
+    def fn(state, batch):
+        extra = {k: v for k, v in batch.items()
+                 if k not in ("tokens", "lm_labels")}
+        core = {"tokens": batch["tokens"], "lm_labels": batch["lm_labels"]}
+        return train_step(state, core, cfg=cfg, train_cfg=train_cfg,
+                          opt_cfg=opt_cfg, extra_inputs=extra or None)
+
+    q_tp, kv_tp = attn_tp_flags(cfg, mesh)
+    in_sh = (train_state_shardings(mesh, state, q_tp=q_tp, kv_tp=kv_tp),
+             batch_shardings(mesh, batch))
+    return fn, (state, batch), in_sh, (0,)
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  budget: int = PREFILL_BUDGET, policy_name="trimkv"):
+    cfg = _maybe_context_parallel(cfg, mesh)
+    serve_cfg = ServeConfig(budget=budget, policy=policy_name)
+    policy = make_policy(serve_cfg)
+    params, gates = model_shapes(cfg)
+    state = decode_state_shapes(cfg, shape.global_batch, budget)
+    tokens = input_specs(cfg, shape)
+    extra = {k: v for k, v in tokens.items() if k != "tokens"}
+    tokens = tokens["tokens"]
+
+    def fn(params, gates, tokens, state, extra):
+        return T.prefill(params, gates, cfg, tokens, state, policy,
+                         serve_cfg, extra_inputs=extra or None)
+
+    q_tp, kv_tp = attn_tp_flags(cfg, mesh)
+    in_sh = (param_shardings(mesh, params, q_tp=q_tp, kv_tp=kv_tp),
+             replicated(mesh, gates),
+             batch_shardings(mesh, {"tokens": tokens})["tokens"],
+             state_shardings(mesh, state),
+             batch_shardings(mesh, extra))
+    return fn, (params, gates, tokens, state, extra), in_sh, (3,)
+
+
+TP_WEIGHT_LIMIT = 9 * 2**30     # bytes/chip of TP-only weights we allow
+
+
+def _serving_fsdp(cfg, mesh, params) -> bool:
+    """Decode weights: TP-only (data-replicated, zero gather traffic)
+    when the per-chip TP footprint fits; FSDP-sharded otherwise (the
+    gathers then amortize over the batch). §Perf iteration 2."""
+    import numpy as np
+    total = sum(int(np.prod(l.shape)) * 2 for l in jax.tree.leaves(params))
+    return total / mesh.shape["model"] > TP_WEIGHT_LIMIT
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 budget: int = DECODE_BUDGET, policy_name="trimkv"):
+    serve_cfg = ServeConfig(budget=budget, policy=policy_name)
+    policy = make_policy(serve_cfg)
+    params, gates = model_shapes(cfg)
+    state = decode_state_shapes(cfg, shape.global_batch, budget)
+    # the decode step is lowered at t = seq_len: the cache already holds
+    # `budget` tokens of a seq_len-long context.
+    token = input_specs(cfg, shape)["token"]
+
+    def fn(params, gates, state, token):
+        return T.decode_step(params, gates, cfg, state, token, policy)
+
+    q_tp, kv_tp = attn_tp_flags(cfg, mesh)
+    in_sh = (param_shardings(mesh, params,
+                             fsdp=_serving_fsdp(cfg, mesh, params),
+                             q_tp=q_tp, kv_tp=kv_tp),
+             replicated(mesh, gates),
+             state_shardings(mesh, state),
+             batch_shardings(mesh, {"token": token})["token"])
+    return fn, (params, gates, state, token), in_sh, (2,)
+
+
+def build(cfg: ModelConfig, shape: ShapeConfig, mesh, **kw):
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, **kw)
+    return build_decode(cfg, shape, mesh, **kw)

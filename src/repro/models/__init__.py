@@ -1,0 +1,11 @@
+from repro.models import blocks, common, transformer
+from repro.models.transformer import (compute_logits, decode_step,
+                                      forward_train, init_decode_state,
+                                      init_gate_params, init_params,
+                                      num_gate_layers, prefill)
+
+__all__ = [
+    "blocks", "common", "transformer",
+    "init_params", "init_gate_params", "forward_train", "compute_logits",
+    "init_decode_state", "prefill", "decode_step", "num_gate_layers",
+]

@@ -1,0 +1,263 @@
+"""Shared building blocks: inits, norms, rope, MLPs, chunked attention.
+
+All models are pure-JAX pytrees (nested dicts of jnp arrays) + pure apply
+functions. No flax. Params live in cfg.dtype (bf16 in production);
+normalization / softmax / loss accumulate in float32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Minimum log-beta: beta -> 0 means "evict immediately"; clamp keeps
+# exp((t-i)*log beta) finite and the gradient alive.
+LOG_BETA_MIN = -80.0
+NEG_INF = -1e30
+
+
+def to_dtype(cfg_dtype: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg_dtype]
+
+
+# ---------------------------------------------------------------- init
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    p = {"w": (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype=dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp_apply(p, x):
+    """SwiGLU feed-forward."""
+    g = jax.nn.silu(dense_apply(p["gate"], x))
+    u = dense_apply(p["up"], x)
+    return dense_apply(p["down"], g * u)
+
+
+# ---------------------------------------------------------------- rope
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., T, H, Dh]; positions: broadcastable to [..., T]."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(head_dim, theta))        # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, Dh/2]
+    angles = angles[..., None, :]                            # [..., T, 1, Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------- chunked attention
+
+# XLA-level "flash" attention: outer loop over query blocks, inner
+# lax.scan over kv blocks with an online-softmax carry. jax.checkpoint
+# keeps backward memory at O(block^2) instead of O(T^2). This is the
+# path the production dry-run lowers (Pallas kernels are the TPU
+# hot-path and are validated in interpret mode; see DESIGN.md §2).
+
+
+def _attend_block(q, k, v, bias, mask, carry):
+    """One (q_blk, kv_blk) tile of online softmax.
+
+    q: [B,H,Bq,D] k/v: [B,H,Bk,D] bias: [B,H,Bq,Bk] or None
+    mask: [B,H,Bq,Bk] bool; carry = (m, l, acc).
+    """
+    m, l, acc = carry
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    s = s / np.sqrt(q.shape[-1])
+    if bias is not None:
+        s = s + bias
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    scale = jnp.exp(m - m_new)
+    l_new = l * scale + jnp.sum(p, axis=-1)
+    acc_new = acc * scale[..., None] + jnp.einsum(
+        "bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(q, k, v, *, log_beta=None, causal=True, window=0,
+                      q_offset=0, kv_positions=None, q_block=512,
+                      kv_block=512, unroll=False):
+    """Memory-efficient attention with optional retention bias.
+
+    q: [B, Tq, Hq, D]; k, v: [B, Tk, Hkv, D] (GQA: Hq % Hkv == 0)
+    log_beta: [B, Tk, Hkv] per-key retention log-score; adds
+        (t - i) * log_beta_i to the logit (paper Eq. 3).
+    window: sliding-window size (0 = unbounded).
+    q_offset: absolute position of q[0] (for prefill continuation).
+    kv_positions: [B, Tk] absolute key positions (defaults to arange).
+    Returns [B, Tq, Hq, D] in q.dtype.
+    """
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+
+    qh = jnp.moveaxis(q, 1, 2)                               # [B,Hq,Tq,D]
+    kh = jnp.moveaxis(k, 1, 2)                               # [B,Hkv,Tk,D]
+    vh = jnp.moveaxis(v, 1, 2)
+    kh = jnp.repeat(kh, group, axis=1)                       # [B,Hq,Tk,D]
+    vh = jnp.repeat(vh, group, axis=1)
+    if log_beta is not None:
+        lb = jnp.moveaxis(log_beta, 1, 2).astype(jnp.float32)  # [B,Hkv,Tk]
+        lb = jnp.repeat(lb, group, axis=1)                   # [B,Hq,Tk]
+
+    if kv_positions is None:
+        kv_pos = jnp.broadcast_to(jnp.arange(Tk)[None], (B, Tk))
+    else:
+        kv_pos = kv_positions
+    kv_pos = kv_pos[:, None, :]                              # [B,1,Tk]
+
+    q_block = min(q_block, Tq)
+    kv_block = min(kv_block, Tk)
+    n_q = -(-Tq // q_block)
+    n_kv = -(-Tk // kv_block)
+    pad_q = n_q * q_block - Tq
+    pad_kv = n_kv * kv_block - Tk
+
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        kh = jnp.pad(kh, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        if log_beta is not None:
+            lb = jnp.pad(lb, ((0, 0), (0, 0), (0, pad_kv)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, 0), (0, pad_kv)),
+                         constant_values=-1)
+
+    kv_valid = (kv_pos >= 0)                                 # [B,1,nk*bk]
+    k_blocks = kh.reshape(B, Hq, n_kv, kv_block, D)
+    v_blocks = vh.reshape(B, Hq, n_kv, kv_block, D)
+    pos_blocks = kv_pos.reshape(B, 1, n_kv, kv_block)
+    valid_blocks = kv_valid.reshape(B, 1, n_kv, kv_block)
+    if log_beta is not None:
+        lb_blocks = lb.reshape(B, Hq, n_kv, kv_block)
+
+    def one_q_block(qi, q_blk):
+        q_pos = q_offset + qi * q_block + jnp.arange(q_block)  # [Bq]
+        m0 = jnp.full((B, Hq, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hq, q_block), jnp.float32)
+        a0 = jnp.zeros((B, Hq, q_block, D), jnp.float32)
+
+        def kv_step(carry, xs):
+            if log_beta is not None:
+                kb, vb, pb, vb_mask, lbb = xs
+            else:
+                kb, vb, pb, vb_mask = xs
+                lbb = None
+            dist = q_pos[None, None, :, None] - pb[:, :, None, :]  # [B,1,Bq,Bk]
+            mask = vb_mask[:, :, None, :]
+            if causal:
+                mask = mask & (dist >= 0)
+            if window > 0:
+                mask = mask & (dist < window)
+            # mask stays [B,1,Bq,Bk]; `where` broadcasts it across heads
+            # implicitly — an explicit broadcast_to materialized 144 GiB
+            # of per-head masks on mixtral prefill_32k (§Perf mixtral
+            # iteration 2)
+            bias = None
+            if lbb is not None:
+                bias = dist.astype(jnp.float32) * lbb[:, :, None, :]
+                bias = jnp.where(mask, bias, 0.0)
+            carry = _attend_block(q_blk, kb, vb, bias, mask, carry)
+            return carry, None
+
+        xs = (jnp.moveaxis(k_blocks, 2, 0), jnp.moveaxis(v_blocks, 2, 0),
+              jnp.moveaxis(pos_blocks, 2, 0), jnp.moveaxis(valid_blocks, 2, 0))
+        if log_beta is not None:
+            xs = xs + (jnp.moveaxis(lb_blocks, 2, 0),)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs,
+                                      unroll=n_kv if unroll else 1)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out                                            # [B,Hq,Bq,D]
+
+    one_q_block = jax.checkpoint(one_q_block, static_argnums=())
+
+    q_blocks = qh.reshape(B, Hq, n_q, q_block, D)
+
+    def scan_q(_, qi):
+        out = one_q_block(qi, q_blocks[:, :, qi])
+        return None, out
+
+    _, outs = jax.lax.scan(scan_q, None, jnp.arange(n_q),
+                           unroll=n_q if unroll else 1)
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, Hq, n_q * q_block, D)
+    out = out[:, :, :Tq]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+def full_attention_ref(q, k, v, *, log_beta=None, causal=True, window=0,
+                       q_offset=0, kv_positions=None):
+    """O(T^2)-memory oracle used by tests; same semantics as
+    chunked_attention."""
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / np.sqrt(D)
+    if kv_positions is None:
+        kv_pos = jnp.broadcast_to(jnp.arange(Tk)[None], (B, Tk))
+    else:
+        kv_pos = kv_positions
+    q_pos = q_offset + jnp.arange(Tq)
+    dist = q_pos[None, None, :, None] - kv_pos[:, None, None, :]
+    mask = kv_pos[:, None, None, :] >= 0
+    if causal:
+        mask = mask & (dist >= 0)
+    if window > 0:
+        mask = mask & (dist < window)
+    if log_beta is not None:
+        lb = jnp.repeat(log_beta, group, axis=2)             # [B,Tk,Hq]
+        bias = dist.astype(jnp.float32) * jnp.moveaxis(
+            lb, 1, 2)[:, :, None, :].astype(jnp.float32)
+        s = s + jnp.where(mask, bias, 0.0)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

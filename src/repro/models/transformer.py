@@ -1,0 +1,364 @@
+"""Generic stacked model covering all six families.
+
+Layers are grouped into repeats of cfg.attn_pattern and the repeats are
+driven by lax.scan over stacked params (O(1) HLO size regardless of
+depth — essential for 100-layer configs on a single-core compiler).
+Remainder layers (num_layers % len(pattern)) run unrolled as "tail".
+
+Public entry points:
+  init_params / init_gate_params
+  forward_train(...)          -> (hidden, aux)   [train + distillation]
+  compute_logits(...)         -> [B,T,Vp] f32 (small-scale only)
+  init_decode_state(...)      -> state pytree
+  prefill(...)                -> (state, last_hidden)
+  decode_step(...)            -> (state, logits [B,Vp])
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import blocks
+from repro.models.common import rmsnorm_apply, rmsnorm_init, to_dtype
+
+ZERO = lambda: jnp.zeros((), jnp.float32)
+
+
+def _unit_and_counts(cfg):
+    unit = cfg.attn_pattern
+    U = len(unit)
+    R = cfg.num_layers // U
+    tail = tuple(unit[: cfg.num_layers % U])
+    return unit, U, R, tail
+
+
+# ------------------------------------------------------------------ init
+
+
+def init_params(key, cfg):
+    dtype = to_dtype(cfg.dtype)
+    unit, U, R, tail = _unit_and_counts(cfg)
+    keys = jax.random.split(key, 8)
+    Vp = cfg.padded_vocab
+    params = {
+        "embed": (jax.random.normal(keys[0], (Vp, cfg.d_model)) * 0.02
+                  ).astype(dtype),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "unembed": {"w": (jax.random.normal(keys[1],
+                                            (cfg.d_model, Vp))
+                          / np.sqrt(cfg.d_model)).astype(dtype)},
+    }
+
+    def init_unit(k):
+        ks = jax.random.split(k, U)
+        return tuple(blocks.init_block(ks[i], cfg, unit[i])
+                     for i in range(U))
+
+    if R > 0:
+        params["layers"] = jax.vmap(init_unit)(jax.random.split(keys[2], R))
+    else:
+        params["layers"] = None
+    tks = jax.random.split(keys[3], max(len(tail), 1))
+    params["tail"] = tuple(blocks.init_block(tks[i], cfg, tail[i])
+                           for i in range(len(tail)))
+
+    if cfg.family == "vlm":
+        params["vis_proj"] = {
+            "w": (jax.random.normal(keys[4], (cfg.vision_dim, cfg.d_model))
+                  / np.sqrt(cfg.vision_dim)).astype(dtype)}
+    if cfg.family == "encdec":
+        ekeys = jax.random.split(keys[5], cfg.encoder_layers)
+
+        def init_enc_unit(k):
+            return (blocks.init_block(k, cfg, "global"),)
+
+        params["encoder"] = {
+            "layers": jax.vmap(init_enc_unit)(ekeys),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+    return params
+
+
+def init_gate_params(key, cfg):
+    """Retention gates mirroring the layer stack (None where the kind has
+    no growing KV cache)."""
+    unit, U, R, tail = _unit_and_counts(cfg)
+
+    def init_unit(k):
+        ks = jax.random.split(k, U)
+        return tuple(blocks.init_block_gate(ks[i], cfg, unit[i])
+                     for i in range(U))
+
+    gates = {}
+    if R > 0:
+        gates["layers"] = jax.vmap(init_unit)(jax.random.split(key, R))
+    else:
+        gates["layers"] = None
+    tks = jax.random.split(jax.random.fold_in(key, 1), max(len(tail), 1))
+    gates["tail"] = tuple(blocks.init_block_gate(tks[i], cfg, tail[i])
+                          for i in range(len(tail)))
+    return gates
+
+
+def num_gate_layers(cfg) -> int:
+    return sum(1 for k in cfg.layer_kinds()
+               if cfg.trimkv and k in ("global", "local", "cross"))
+
+
+# --------------------------------------------------------------- helpers
+
+
+def _take_unit(stacked, i):
+    return jax.tree.map(lambda a: a[i], stacked)
+
+
+def _encoder_forward(enc_params, cfg, source_embeds):
+    """Bidirectional encoder over stub frame embeddings [B,S,d]."""
+    def body(h, up):
+        h, _ = blocks.apply_block_train(up[0], None, cfg, "global", h,
+                                        causal=False)
+        return h, None
+
+    h, _ = jax.lax.scan(body, source_embeds, enc_params["layers"],
+                        unroll=enc_params["layers"] is not None and
+                        cfg.unroll_layers and
+                        jax.tree.leaves(enc_params["layers"])[0].shape[0]
+                        or 1)
+    return rmsnorm_apply(enc_params["final_norm"], h, cfg.norm_eps)
+
+
+def _memory_from_inputs(params, cfg, extra_inputs):
+    """Project stub frontend embeddings into d_model memory tokens."""
+    if cfg.family == "vlm":
+        vis = extra_inputs["vision_embeds"]            # [B,S,vision_dim]
+        return (vis @ params["vis_proj"]["w"]).astype(
+            to_dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        src = extra_inputs["source_embeds"]            # [B,S,d_model]
+        return _encoder_forward(params["encoder"], cfg,
+                                src.astype(to_dtype(cfg.dtype)))
+    return None
+
+
+# ----------------------------------------------------------------- train
+
+
+def forward_train(params, gate_params, cfg, tokens, *, gated=False,
+                  cap_M=None, extra_inputs=None, remat=False):
+    """tokens: [B,T] -> (hidden [B,T,d], aux).
+
+    aux = {"cap": summed per-layer capacity losses, "router": summed MoE
+    aux, "n_gate_layers": python int}. When `gated`, attention uses the
+    retention bias (student); otherwise vanilla attention (teacher).
+    `remat` checkpoints each layer-unit of the scan (stores only the
+    inter-unit residual stream — required to fit 4k-seq training of the
+    large configs in 16 GB HBM; DESIGN.md §5).
+    """
+    unit, U, R, tail = _unit_and_counts(cfg)
+    extra_inputs = extra_inputs or {}
+    memory = _memory_from_inputs(params, cfg, extra_inputs)
+    h = jnp.take(params["embed"], tokens, axis=0)
+
+    def unit_body(h, xs):
+        up, ug = xs
+        cap, router = ZERO(), ZERO()
+        for i, kind in enumerate(unit):
+            g = ug[i] if ug is not None else None
+            h, aux = blocks.apply_block_train(
+                up[i], g, cfg, kind, h, gated=gated, cap_M=cap_M,
+                memory=memory)
+            cap = cap + aux["cap"]
+            router = router + aux["router"]
+        return h, (cap, router)
+
+    cap_total, router_total = ZERO(), ZERO()
+    body = jax.checkpoint(unit_body) if remat else unit_body
+    if R > 0:
+        glayers = (gate_params or {}).get("layers")
+        h, (caps, routers) = jax.lax.scan(
+            body, h, (params["layers"], glayers),
+            unroll=R if cfg.unroll_layers else 1)
+        cap_total += jnp.sum(caps)
+        router_total += jnp.sum(routers)
+    for i, kind in enumerate(tail):
+        g = (gate_params or {}).get("tail", (None,) * len(tail))[i]
+        h, aux = blocks.apply_block_train(params["tail"][i], g, cfg, kind,
+                                          h, gated=gated, cap_M=cap_M,
+                                          memory=memory)
+        cap_total += aux["cap"]
+        router_total += aux["router"]
+    h = rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    return h, {"cap": cap_total, "router": router_total,
+               "n_gate_layers": num_gate_layers(cfg)}
+
+
+def compute_logits(params, cfg, hidden):
+    """[B,T,d] -> [B,T,Vp] f32 with padded-vocab masking. Only for
+    small-scale paths; large-scale losses are chunked (core.losses)."""
+    logits = (hidden @ params["unembed"]["w"]).astype(jnp.float32)
+    mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(mask, logits, -1e30)
+
+
+# ---------------------------------------------------------------- decode
+
+
+def init_decode_state(cfg, batch: int, budget: int):
+    dtype = to_dtype(cfg.dtype)
+    unit, U, R, tail = _unit_and_counts(cfg)
+
+    def one(kind):
+        return blocks.init_block_state(cfg, kind, batch, budget, dtype)
+
+    state = {"t": jnp.zeros((), jnp.int32)}
+    if R > 0:
+        unit_state = tuple(one(k) for k in unit)
+        state["layers"] = jax.tree.map(
+            lambda a: jnp.tile(a[None], (R,) + (1,) * a.ndim), unit_state)
+    else:
+        state["layers"] = None
+    state["tail"] = tuple(one(k) for k in tail)
+    return state
+
+
+def prefill(params, gate_params, cfg, tokens, state, policy, serve_cfg, *,
+            extra_inputs=None):
+    """Single-shot prefill of tokens [B,T] into `state` (assumed fresh).
+    Returns (state, last_hidden [B,d])."""
+    unit, U, R, tail = _unit_and_counts(cfg)
+    extra_inputs = extra_inputs or {}
+    memory = _memory_from_inputs(params, cfg, extra_inputs)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    T = tokens.shape[1]
+
+    def unit_body(h, xs):
+        up, ug, st = xs
+        new_states = []
+        for i, kind in enumerate(unit):
+            g = ug[i] if ug is not None else None
+            h, ns, _ = blocks.apply_block_prefill(
+                up[i], g, cfg, kind, h, st[i], policy=policy,
+                budget=serve_cfg.budget, memory=memory,
+                obs_window=serve_cfg.obs_window)
+            new_states.append(ns)
+        return h, tuple(new_states)
+
+    new_state = {"t": jnp.asarray(T, jnp.int32)}
+    if R > 0:
+        glayers = (gate_params or {}).get("layers")
+        h, stacked = jax.lax.scan(
+            unit_body, h, (params["layers"], glayers, state["layers"]),
+            unroll=R if cfg.unroll_layers else 1)
+        new_state["layers"] = stacked
+    else:
+        new_state["layers"] = None
+    new_tail = []
+    for i, kind in enumerate(tail):
+        g = (gate_params or {}).get("tail", (None,) * len(tail))[i]
+        h, ns, _ = blocks.apply_block_prefill(
+            params["tail"][i], g, cfg, kind, h, state["tail"][i],
+            policy=policy, budget=serve_cfg.budget, memory=memory,
+            obs_window=serve_cfg.obs_window)
+        new_tail.append(ns)
+    new_state["tail"] = tuple(new_tail)
+    h = rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    return new_state, h[:, -1]
+
+
+def prefill_chunk(params, gate_params, cfg, tokens, state, policy,
+                  serve_cfg, *, extra_inputs=None):
+    """Continue prefill with a chunk of tokens [B,C] against existing
+    state (chunked-prefill setting, paper Sec B.3). First chunk must be
+    preceded by memory setup: for cross-attn families call prefill() on
+    the first chunk or pass extra_inputs here to (re)build memory K/V."""
+    unit, U, R, tail = _unit_and_counts(cfg)
+    extra_inputs = extra_inputs or {}
+    memory = _memory_from_inputs(params, cfg, extra_inputs)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    t0 = state["t"]
+    C = tokens.shape[1]
+
+    def unit_body(h, xs):
+        up, ug, st = xs
+        new_states = []
+        for i, kind in enumerate(unit):
+            g = ug[i] if ug is not None else None
+            st_i = st[i]
+            if kind == "cross" and memory is not None:
+                mem_kv = blocks.make_memory_kv(up[i]["xattn"], cfg, memory)
+                st_i = {"cache": st_i["cache"], "xk": mem_kv[0],
+                        "xv": mem_kv[1]}
+            h, ns, _ = blocks.apply_block_prefill_chunk(
+                up[i], g, cfg, kind, h, st_i, t0, policy=policy,
+                obs_window=serve_cfg.obs_window, memory=memory)
+            new_states.append(ns)
+        return h, tuple(new_states)
+
+    new_state = {"t": t0 + C}
+    if R > 0:
+        glayers = (gate_params or {}).get("layers")
+        h, stacked = jax.lax.scan(
+            unit_body, h, (params["layers"], glayers, state["layers"]),
+            unroll=R if cfg.unroll_layers else 1)
+        new_state["layers"] = stacked
+    else:
+        new_state["layers"] = None
+    new_tail = []
+    for i, kind in enumerate(tail):
+        g = (gate_params or {}).get("tail", (None,) * len(tail))[i]
+        st_i = state["tail"][i]
+        if kind == "cross" and memory is not None:
+            mem_kv = blocks.make_memory_kv(params["tail"][i]["xattn"], cfg,
+                                           memory)
+            st_i = {"cache": st_i["cache"], "xk": mem_kv[0],
+                    "xv": mem_kv[1]}
+        h, ns, _ = blocks.apply_block_prefill_chunk(
+            params["tail"][i], g, cfg, kind, h, st_i, t0, policy=policy,
+            obs_window=serve_cfg.obs_window, memory=memory)
+        new_tail.append(ns)
+    new_state["tail"] = tuple(new_tail)
+    h = rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    return new_state, h[:, -1]
+
+
+def decode_step(params, gate_params, cfg, state, token, policy):
+    """token: [B] int32. Returns (new_state, logits [B, Vp] f32)."""
+    unit, U, R, tail = _unit_and_counts(cfg)
+    x = jnp.take(params["embed"], token, axis=0)           # [B,d]
+    t = state["t"]
+
+    def unit_body(x, xs):
+        up, ug, st = xs
+        new_states = []
+        for i, kind in enumerate(unit):
+            g = ug[i] if ug is not None else None
+            x, ns, _ = blocks.apply_block_decode(
+                up[i], g, cfg, kind, x, st[i], t, policy=policy)
+            new_states.append(ns)
+        return x, tuple(new_states)
+
+    new_state = {"t": t + 1}
+    if R > 0:
+        glayers = (gate_params or {}).get("layers")
+        x, stacked = jax.lax.scan(
+            unit_body, x, (params["layers"], glayers, state["layers"]),
+            unroll=R if cfg.unroll_layers else 1)
+        new_state["layers"] = stacked
+    else:
+        new_state["layers"] = None
+    new_tail = []
+    for i, kind in enumerate(tail):
+        g = (gate_params or {}).get("tail", (None,) * len(tail))[i]
+        x, ns, _ = blocks.apply_block_decode(
+            params["tail"][i], g, cfg, kind, x, state["tail"][i], t,
+            policy=policy)
+        new_tail.append(ns)
+    new_state["tail"] = tuple(new_tail)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["unembed"]["w"]).astype(jnp.float32)
+    mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return new_state, jnp.where(mask, logits, -1e30)

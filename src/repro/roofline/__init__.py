@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (HEADER, RooflineReport, analyze,
+                                     collective_bytes, save_reports)
+from repro.roofline.flops import param_counts, useful_flops
+
+__all__ = ["HEADER", "RooflineReport", "analyze", "collective_bytes",
+           "save_reports", "param_counts", "useful_flops"]

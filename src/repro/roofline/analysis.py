@@ -1,0 +1,179 @@
+"""Three-term roofline from compiled dry-run artifacts (no hardware).
+
+  compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+  memory term     = HLO_bytes / HBM_bw               (per chip)
+  collective term = collective wire bytes / ICI_bw   (per chip)
+
+`compiled.cost_analysis()` on an SPMD-partitioned module reports the
+per-device module's FLOPs and bytes, so the terms are already per-chip.
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO
+text and sum operand/result sizes of every collective op, weighted by
+the ring-algorithm wire factor for its replica-group size g:
+
+  all-gather        out_bytes * (g-1)/g
+  reduce-scatter    in_bytes  * (g-1)/g
+  all-reduce        2 * bytes * (g-1)/g     (RS + AG)
+  all-to-all        bytes * (g-1)/g
+  collective-permute bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# `bf16[2,4096]{1,0}` or tuple `(f32[8,128], u32[8])`
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|f16|c64|c128)\[([\d,]*)\]")
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:
+        n_groups, g = int(m.group(1)), int(m.group(2))
+        return max(g, 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return total_devices
+
+
+def collective_bytes(hlo_text: str, total_devices: int) -> Dict[str, float]:
+    """Per-chip wire bytes by collective kind, from optimized HLO text.
+
+    `-done` ops are skipped (the matching `-start` carries the shape).
+    """
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_shape, kind = m.group(1), m.group(2)
+        size = _shape_bytes(result_shape)
+        g = _group_size(line, total_devices)
+        if g <= 1:
+            continue
+        ring = (g - 1) / g
+        if kind == "all-reduce":
+            wire = 2.0 * size * ring
+        elif kind == "reduce-scatter":
+            wire = size * g * ring      # result is the scattered shard
+        elif kind == "collective-permute":
+            wire = float(size)
+        else:                           # all-gather / all-to-all
+            wire = size * ring
+        out[kind] = out.get(kind, 0.0) + wire
+        out["_count_" + kind] = out.get("_count_" + kind, 0) + 1
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float                    # per chip
+    hlo_bytes: float                    # per chip (HBM traffic proxy)
+    coll_bytes: float                   # per chip (wire)
+    coll_breakdown: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float                  # 6ND / 2ND useful-work estimate
+    peak_memory_per_device: Optional[float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): fraction of compiled
+        compute that is 'useful' model math (catches remat/redundancy).
+        Can exceed 1 when XLA's counter underestimates fused ops."""
+        denom = self.hlo_flops * self.chips
+        return self.model_flops / denom if denom else float("nan")
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["useful_ratio"] = self.useful_ratio
+        return d
+
+    def row(self) -> str:
+        return (f"{self.arch:24s} {self.shape:12s} {self.mesh:10s} "
+                f"{self.t_compute*1e3:10.3f} {self.t_memory*1e3:10.3f} "
+                f"{self.t_collective*1e3:10.3f}  {self.dominant:10s} "
+                f"{self.useful_ratio:8.3f}")
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_desc: str,
+            chips: int, model_flops: float,
+            hlo_text: Optional[str] = None) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text, chips)
+    coll_total = sum(v for k, v in coll.items() if not k.startswith("_"))
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes +
+                    ma.output_size_in_bytes)
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        hlo_flops=flops, hlo_bytes=nbytes, coll_bytes=coll_total,
+        coll_breakdown=coll,
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=nbytes / HBM_BW,
+        t_collective=coll_total / ICI_BW,
+        model_flops=model_flops,
+        peak_memory_per_device=mem)
+
+
+HEADER = (f"{'arch':24s} {'shape':12s} {'mesh':10s} "
+          f"{'compute ms':>10s} {'memory ms':>10s} {'coll ms':>10s}  "
+          f"{'dominant':10s} {'useful':>8s}")
+
+
+def save_reports(path: str, reports):
+    with open(path, "w") as f:
+        json.dump([r.to_dict() for r in reports], f, indent=1)

@@ -1,0 +1,91 @@
+"""Useful-work FLOP estimates (MODEL_FLOPS) per (arch, input shape).
+
+Dense/ssm/hybrid: 6*N*D for training (fwd+bwd), 2*N*D forward-only.
+MoE: N_active (router keeps k of E experts per token).
+Distillation training runs teacher fwd + student fwd/bwd = 8*N*D.
+Attention adds 4*B*T*L_ctx*Hq*Dh per attention layer (QK^T + PV, fwd);
+local-attention layers cap L_ctx at the window, bounded-cache decode
+caps it at the budget M.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def _leaf_count(tree, pred=None) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if pred is None or pred("/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)):
+            total += int(np.prod(leaf.shape))
+    return total
+
+
+def param_counts(cfg, params):
+    """(total, active, embedding) parameter counts from a shape tree."""
+    total = _leaf_count(params)
+    embed = _leaf_count(params, lambda s: "embed" in s and "unembed" not in s)
+    expert = _leaf_count(
+        params, lambda s: s.endswith(("gate_w", "up_w", "down_w")))
+    active = total
+    if cfg.num_experts > 0 and cfg.experts_per_token > 0:
+        active = total - expert * (1 - cfg.experts_per_token /
+                                   cfg.num_experts)
+    return total, active, embed
+
+
+def _attn_flops(cfg, batch, q_len, ctx_len, budget=0) -> float:
+    """Forward attention math across layers (4*B*Tq*Tctx*Hq*Dh each)."""
+    total = 0.0
+    for kind in cfg.layer_kinds():
+        if kind not in ("global", "local", "cross"):
+            continue
+        ctx = ctx_len
+        if kind == "local" and cfg.window > 0:
+            ctx = min(ctx, cfg.window)
+        if budget > 0:
+            ctx = min(ctx, budget)
+        if q_len > 1:
+            # causal: average context is ~ctx/2 when ctx tracks q
+            ctx = ctx / 2 if ctx == ctx_len else ctx
+        total += 4.0 * batch * q_len * ctx * cfg.num_heads * cfg.head_dim
+        if kind == "cross":
+            from repro.models.blocks import memory_len
+            total += 4.0 * batch * q_len * memory_len(cfg) * \
+                cfg.num_heads * cfg.head_dim
+    return total
+
+
+def moe_group_flops(cfg, n_tokens: int, group: int = 2048) -> float:
+    """Total FLOPs of the grouped dense-dispatch MoE path for n_tokens
+    (all layers): dispatch in/out einsums + expert matmuls. The group
+    lax.scan is counted ONCE by HloCostAnalysis; the dry-run adds the
+    residual (n_groups-1)/n_groups of this analytically (fwd only;
+    the caller scales for backward)."""
+    if not cfg.num_experts:
+        return 0.0
+    E, k, d, f = (cfg.num_experts, cfg.experts_per_token, cfg.d_model,
+                  cfg.d_ff)
+    g = min(group, n_tokens)
+    cap = max(int(np.ceil(g * k / E * cfg.moe_capacity_factor)), k)
+    n_groups = max(n_tokens // g, 1)
+    per_group = (2 * g * E * cap * d          # dispatch in
+                 + 2 * g * E * cap * d        # combine out
+                 + 2 * E * cap * (3 * d * f)) # gate/up/down matmuls
+    n_moe_layers = sum(1 for kk in cfg.layer_kinds()
+                       if kk in ("global", "local", "cross"))
+    return float(per_group) * n_groups * n_moe_layers
+
+
+def useful_flops(cfg, shape, params, *, budget: int = 0) -> float:
+    """MODEL_FLOPS for the lowered step (all chips combined)."""
+    total, active, embed = param_counts(cfg, params)
+    n = active - embed / 2              # count unembed, not the embed gather
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        # teacher fwd (2ND) + student fwd+bwd (6ND)
+        return 8.0 * n * B * T + 4.0 * _attn_flops(cfg, B, T, T)
+    if shape.kind == "prefill":
+        return 2.0 * n * B * T + _attn_flops(cfg, B, T, T)
+    # decode: one token, context = min(T, budget) cached entries
+    return 2.0 * n * B + _attn_flops(cfg, B, 1, T, budget=budget)

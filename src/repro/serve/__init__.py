@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, build_engine
+
+__all__ = ["Engine", "build_engine"]

@@ -1,0 +1,23 @@
+from repro.sharding.rules import (
+    attn_tp_flags,
+    batch_shardings,
+    batch_spec,
+    describe,
+    fsdp_axes,
+    get_cp_mesh,
+    param_shardings,
+    param_spec,
+    set_cp_mesh,
+    pick,
+    replicated,
+    state_shardings,
+    state_spec,
+    train_state_shardings,
+)
+
+__all__ = [
+    "attn_tp_flags", "batch_shardings", "batch_spec", "describe", "fsdp_axes",
+    "get_cp_mesh", "param_shardings", "param_spec", "pick",
+    "replicated", "set_cp_mesh",
+    "state_shardings", "state_spec", "train_state_shardings",
+]

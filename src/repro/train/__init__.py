@@ -1,0 +1,6 @@
+from repro.train.distill import (distill_loss, make_jit_train_step,
+                                 make_train_state, train_step)
+from repro.train.trainer import train_loop
+
+__all__ = ["distill_loss", "train_step", "make_train_state",
+           "make_jit_train_step", "train_loop"]

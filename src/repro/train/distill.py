@@ -1,0 +1,82 @@
+"""TRIM-KV gate training: distillation from the frozen base model
+(paper Sec 4.2).
+
+Only gate parameters receive gradients; the base LLM is frozen (and the
+teacher forward is the same params with vanilla attention). Loss:
+  L = use_kl * KL(teacher || student) + use_ntp * CE + lambda_cap * L_cap
+with L_cap averaged over gate-bearing layers. When use_kl is False the
+teacher forward is skipped entirely (ablation Table 5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import kl_and_ntp_from_hidden
+from repro.models import forward_train, num_gate_layers
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule, \
+    init_opt_state
+
+
+def distill_loss(gate_params, params, cfg, train_cfg, tokens, lm_labels,
+                 extra_inputs=None):
+    cap_M = train_cfg.capacity_M if train_cfg.use_cap else None
+    h_s, aux = forward_train(params, gate_params, cfg, tokens, gated=True,
+                             cap_M=cap_M, extra_inputs=extra_inputs,
+                             remat=train_cfg.remat)
+    if train_cfg.use_kl:
+        h_t, _ = forward_train(params, None, cfg, tokens, gated=False,
+                               extra_inputs=extra_inputs,
+                               remat=train_cfg.remat)
+        h_t = jax.lax.stop_gradient(h_t)
+    else:
+        h_t = jax.lax.stop_gradient(h_s)
+    kl, ntp = kl_and_ntp_from_hidden(
+        h_s, h_t, params["unembed"], lm_labels, vocab_size=cfg.vocab_size,
+        use_kl=train_cfg.use_kl, use_ntp=train_cfg.use_ntp)
+    n_gates = max(num_gate_layers(cfg), 1)
+    cap = aux["cap"] / n_gates
+    loss = jnp.zeros((), jnp.float32)
+    if train_cfg.use_kl:
+        loss = loss + kl
+    if train_cfg.use_ntp:
+        loss = loss + ntp
+    if train_cfg.use_cap:
+        loss = loss + train_cfg.lambda_cap * cap
+    return loss, {"kl": kl, "ntp": ntp, "cap": cap, "loss": loss}
+
+
+def make_train_state(key, cfg, train_cfg, params, gate_params):
+    opt_cfg = AdamWConfig(
+        lr=cosine_schedule(train_cfg.learning_rate, train_cfg.warmup_steps,
+                           train_cfg.total_steps),
+        weight_decay=train_cfg.weight_decay,
+        grad_clip=train_cfg.grad_clip)
+    return {
+        "params": params,                     # frozen base
+        "gates": gate_params,                 # trainable
+        "opt": init_opt_state(gate_params),
+    }, opt_cfg
+
+
+def train_step(state, batch, *, cfg, train_cfg, opt_cfg,
+               extra_inputs=None):
+    """One distillation step. batch: {"tokens": [B,T], "lm_labels":
+    [B,T]}. Returns (new_state, metrics)."""
+    (loss, metrics), grads = jax.value_and_grad(
+        distill_loss, has_aux=True)(
+            state["gates"], state["params"], cfg, train_cfg,
+            batch["tokens"], batch["lm_labels"], extra_inputs)
+    new_gates, new_opt, opt_metrics = adamw_update(
+        opt_cfg, grads, state["opt"], state["gates"])
+    metrics.update(opt_metrics)
+    return {"params": state["params"], "gates": new_gates,
+            "opt": new_opt}, metrics
+
+
+def make_jit_train_step(cfg, train_cfg, opt_cfg):
+    return jax.jit(functools.partial(train_step, cfg=cfg,
+                                     train_cfg=train_cfg, opt_cfg=opt_cfg))

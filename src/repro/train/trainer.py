@@ -1,0 +1,50 @@
+"""Training loop: data pipeline -> jit train_step -> metrics/ckpt."""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro import checkpoint
+from repro.data import DataConfig, batches
+from repro.models import init_gate_params, init_params
+from repro.train.distill import make_jit_train_step, make_train_state
+
+
+def train_loop(cfg, train_cfg, data_cfg: DataConfig, *,
+               steps: Optional[int] = None, ckpt_path: Optional[str] = None,
+               ckpt_every: int = 200, log_every: int = 10,
+               params=None, gate_params=None, log_fn=print):
+    key = jax.random.PRNGKey(train_cfg.seed)
+    kp, kg = jax.random.split(key)
+    if params is None:
+        params = init_params(kp, cfg)
+    if gate_params is None:
+        gate_params = init_gate_params(kg, cfg)
+    state, opt_cfg = make_train_state(key, cfg, train_cfg, params,
+                                      gate_params)
+    step_fn = make_jit_train_step(cfg, train_cfg, opt_cfg)
+    total = steps if steps is not None else train_cfg.total_steps
+    history = []
+    t0 = time.time()
+    for batch in batches(data_cfg):
+        i = batch["step"]
+        if i >= total:
+            break
+        state, metrics = step_fn(state, {"tokens": batch["tokens"],
+                                         "lm_labels": batch["lm_labels"]})
+        if i % log_every == 0 or i == total - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["sec"] = time.time() - t0
+            history.append(m)
+            log_fn(f"step {i:5d} loss {m['loss']:.4f} kl {m['kl']:.4f} "
+                   f"ntp {m['ntp']:.4f} cap {m['cap']:.4f} "
+                   f"gnorm {m['grad_norm']:.3f}")
+        if ckpt_path and (i + 1) % ckpt_every == 0:
+            checkpoint.save(ckpt_path, state["gates"], step=i)
+    if ckpt_path:
+        checkpoint.save(ckpt_path, state["gates"], step=total)
+    return state, history

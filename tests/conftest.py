@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests see the single real CPU device — the 512-device flag is
+# reserved for the dry-run (launch/dryrun.py sets it before jax init).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,46 @@
+"""Dry-run smoke: runs repro.launch.dryrun in a SUBPROCESS (it needs
+XLA_FLAGS=512 host devices before jax init, which must not leak into
+this test process). One cheap combo per mesh; the full 44-combo x 2-mesh
+sweep is driven by scripts/run_dryruns.sh and recorded in
+EXPERIMENTS.md."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env,
+        cwd=REPO)
+
+
+@pytest.mark.slow
+def test_dryrun_single_pod_decode(tmp_path):
+    out = tmp_path / "r.json"
+    p = _run(["--arch", "seamless-m4t-large-v2", "--shape", "decode_32k",
+              "--json", str(out)])
+    assert p.returncode == 0, p.stdout[-2000:] + p.stderr[-2000:]
+    rep = json.loads(out.read_text())[0]
+    assert rep["chips"] == 256
+    assert rep["hlo_flops"] > 0
+    assert rep["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_compiles(tmp_path):
+    out = tmp_path / "r.json"
+    p = _run(["--arch", "seamless-m4t-large-v2", "--shape", "decode_32k",
+              "--multi-pod", "--fast", "--json", str(out)])
+    assert p.returncode == 0, p.stdout[-2000:] + p.stderr[-2000:]
+    rep = json.loads(out.read_text())[0]
+    assert rep["chips"] == 512
+    assert rep["mesh"] == "2x16x16"

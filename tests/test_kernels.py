@@ -1,0 +1,156 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (deliverable (c)).
+
+Each Pallas kernel runs in interpret mode (CPU container; TPU is the
+compile target) across a grid of shapes/dtypes and must match ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.common import chunked_attention, full_attention_ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ------------------------------------------------- retention attention
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,T,D", [
+    (1, 1, 1, 64, 32),
+    (2, 4, 2, 128, 64),
+    (1, 8, 1, 257, 64),      # non-multiple-of-block T, MQA
+    (2, 6, 3, 192, 128),     # GQA group 2
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_retention_attention_matches_ref(B, Hq, Hkv, T, D, dtype):
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    q = rand(k1, (B, Hq, T, D), dtype)
+    k = rand(k2, (B, Hkv, T, D), dtype)
+    v = rand(k3, (B, Hkv, T, D), dtype)
+    log_beta = -jnp.abs(rand(k4, (B, Hkv, T))) * 0.05
+    out = ops.retention_attention(q, k, v, log_beta, impl="pallas")
+    want = ops.retention_attention(q, k, v, log_beta, impl="ref")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [0, 32])
+def test_retention_attention_xla_path(window):
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    B, Hq, Hkv, T, D = 2, 4, 2, 200, 64
+    q = rand(k1, (B, Hq, T, D))
+    k = rand(k2, (B, Hkv, T, D))
+    v = rand(k3, (B, Hkv, T, D))
+    lb = -jnp.abs(rand(k4, (B, Hkv, T))) * 0.05
+    out = ops.retention_attention(q, k, v, lb, window=window, impl="xla")
+    want = ops.retention_attention(q, k, v, lb, window=window, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_retention_attention_beta_one_recovers_vanilla():
+    """Paper Eq. 3: all beta = 1 -> vanilla attention."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    B, H, T, D = 2, 4, 96, 64
+    q, k, v = (rand(x, (B, H, T, D)) for x in (k1, k2, k3))
+    lb = jnp.zeros((B, H, T))
+    gated = ops.retention_attention(q, k, v, lb, impl="pallas")
+    vanilla = ops.retention_attention(q, k, v, None, impl="ref")
+    np.testing.assert_allclose(np.asarray(gated), np.asarray(vanilla),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_attention_matches_full_ref():
+    """The production XLA attention (BTHD layout) vs O(T^2) oracle."""
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    B, Tq, Hq, Hkv, D = 2, 130, 4, 2, 64
+    q = rand(k1, (B, Tq, Hq, D))
+    k = rand(k2, (B, Tq, Hkv, D))
+    v = rand(k3, (B, Tq, Hkv, D))
+    lb = -jnp.abs(rand(k4, (B, Tq, Hkv))) * 0.05
+    for kw in ({}, {"log_beta": lb}, {"window": 17},
+               {"log_beta": lb, "window": 33}):
+        out = chunked_attention(q, k, v, q_block=64, kv_block=32, **kw)
+        want = full_attention_ref(q, k, v, **kw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5, err_msg=str(kw))
+
+
+def test_chunked_attention_q_offset():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    B, Hq, D, T = 1, 2, 32, 64
+    q = rand(k1, (B, 16, Hq, D))
+    k = rand(k2, (B, T, Hq, D))
+    v = rand(k3, (B, T, Hq, D))
+    out = chunked_attention(q, k, v, q_offset=48, q_block=8, kv_block=16)
+    want = full_attention_ref(q, k, v, q_offset=48)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------- capacity loss
+
+
+@pytest.mark.parametrize("B,H,T", [(1, 1, 64), (2, 3, 200), (1, 2, 257)])
+@pytest.mark.parametrize("M", [1.0, 8.0, 64.0])
+def test_capacity_loss_matches_ref(B, H, T, M):
+    beta = jax.nn.sigmoid(rand(KEY, (B, T, H), scale=2.0))
+    got_p = ops.capacity_loss(beta, M, impl="pallas")
+    got_x = ops.capacity_loss(beta, M, impl="xla")
+    want = ops.capacity_loss(beta, M, impl="ref")
+    np.testing.assert_allclose(float(got_p), float(want), rtol=1e-5,
+                               atol=1e-7)
+    np.testing.assert_allclose(float(got_x), float(want), rtol=1e-5,
+                               atol=1e-7)
+
+
+def test_capacity_loss_grad_matches_ref():
+    beta = jax.nn.sigmoid(rand(KEY, (1, 96, 2), scale=2.0))
+    g_x = jax.grad(lambda b: ops.capacity_loss(b, 4.0, impl="xla"))(beta)
+    g_r = jax.grad(lambda b: ops.capacity_loss(b, 4.0, impl="ref"))(beta)
+    np.testing.assert_allclose(np.asarray(g_x), np.asarray(g_r),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_capacity_loss_zero_when_under_budget():
+    beta = jnp.full((1, 32, 1), 0.1)   # S_t ~ 1/(1-0.1) << M
+    assert float(ops.capacity_loss(beta, 32.0, impl="ref")) == 0.0
+    assert float(ops.capacity_loss(beta, 32.0, impl="xla")) == 0.0
+
+
+# ----------------------------------------------------- decode attention
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,M,D", [
+    (1, 1, 1, 64, 32),
+    (2, 8, 2, 128, 64),
+    (2, 4, 4, 96, 128),
+])
+def test_decode_attention_matches_ref(B, Hq, Hkv, M, D):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = rand(k1, (B, Hq, D))
+    kc = rand(k2, (B, Hkv, M, D))
+    vc = rand(k3, (B, Hkv, M, D))
+    # partially-filled cache with out-of-order positions (post-eviction)
+    pos = np.full((B, Hkv, M), -1, np.int32)
+    rng = np.random.RandomState(0)
+    for b in range(B):
+        for h in range(Hkv):
+            n = rng.randint(M // 2, M)
+            pos[b, h, :n] = rng.choice(M * 2, size=n, replace=False)
+    pos = jnp.asarray(pos)
+    for window in (0, M // 2):
+        got = ops.decode_attention(q, kc, vc, pos, 2 * M, window=window,
+                                   impl="pallas")
+        want = ops.decode_attention(q, kc, vc, pos, 2 * M, window=window,
+                                    impl="ref")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)

@@ -1,0 +1,112 @@
+"""Roofline machinery unit tests: HLO collective parser, FLOP model,
+input specs. (The end-to-end dry-run is exercised by
+tests/test_dryrun.py in a subprocess — it needs 512 host devices.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.specs import (build, decode_state_shapes, input_specs,
+                                model_shapes)
+from repro.roofline import collective_bytes, param_counts, useful_flops
+from repro.roofline.analysis import _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[2,4096]") == 2 * 4096 * 2
+    assert _shape_bytes("f32[8]") == 32
+    assert _shape_bytes("(f32[8,128], u32[8])") == 8 * 128 * 4 + 32
+    assert _shape_bytes("pred[16]") == 16
+
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[64,128]{1,0} all-gather(%p0), replica_groups=[32,16]<=[512], dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%p1), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[32]{0} reduce-scatter(%p2), replica_groups=[4,128]<=[512], dimensions={0}
+  %cp = bf16[256]{0} collective-permute(%p3), source_target_pairs={{0,1}}
+  %done = bf16[64,128]{1,0} all-gather-done(%x)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes(HLO, 512)
+    # all-gather: result 64*128*2 bytes * (16-1)/16
+    np.testing.assert_allclose(out["all-gather"],
+                               64 * 128 * 2 * 15 / 16)
+    # all-reduce: 2 * size * (4-1)/4
+    np.testing.assert_allclose(out["all-reduce"], 2 * 4096 * 3 / 4)
+    # reduce-scatter: shard-result * g * (g-1)/g
+    np.testing.assert_allclose(out["reduce-scatter"],
+                               32 * 4 * 128 * 127 / 128)
+    assert out["collective-permute"] == 256 * 2
+    assert out["_count_all-gather"] == 1          # -done skipped
+
+
+def test_collective_bytes_skips_group_of_one():
+    hlo = ('%ag = f32[64]{0} all-gather(%p0), '
+           'replica_groups=[512,1]<=[512]')
+    assert collective_bytes(hlo, 512) == {}
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("qwen2.5-14b", 13e9, 16e9),
+    ("mixtral-8x7b", 45e9, 50e9),          # total params
+    ("falcon-mamba-7b", 6e9, 9e9),
+    ("llama-3.2-vision-90b", 80e9, 100e9),
+    ("minitron-8b", 8e9, 11e9),
+    ("gemma3-12b", 11e9, 14e9),
+])
+def test_param_counts_match_model_cards(arch, lo, hi):
+    cfg = get_config(arch)
+    params, _ = model_shapes(cfg)
+    total, active, embed = param_counts(cfg, params)
+    assert lo <= total <= hi, f"{arch}: {total/1e9:.2f}B"
+    assert active <= total
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("mixtral-8x7b")
+    params, _ = model_shapes(cfg)
+    total, active, _ = param_counts(cfg, params)
+    # 8 experts top-2: active ~ 2/8 of expert params + shared
+    assert active < 0.5 * total
+    cfg2 = get_config("granite-moe-3b-a800m")
+    params2, _ = model_shapes(cfg2)
+    t2, a2, _ = param_counts(cfg2, params2)
+    assert a2 < 0.6 * t2                    # 40 experts top-8
+
+
+def test_useful_flops_ordering():
+    cfg = get_config("qwen2.5-14b")
+    params, _ = model_shapes(cfg)
+    f_train = useful_flops(cfg, INPUT_SHAPES["train_4k"], params)
+    f_prefill = useful_flops(cfg, INPUT_SHAPES["prefill_32k"], params)
+    f_decode = useful_flops(cfg, INPUT_SHAPES["decode_32k"], params,
+                            budget=32768)
+    assert f_train > f_prefill > f_decode > 0
+
+
+def test_input_specs_are_structs_only():
+    for arch in ("qwen2.5-14b", "llama-3.2-vision-90b",
+                 "seamless-m4t-large-v2", "falcon-mamba-7b"):
+        cfg = get_config(arch)
+        for shape in INPUT_SHAPES.values():
+            specs = input_specs(cfg, shape)
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct)
+        state = decode_state_shapes(cfg, 4, 128)
+        for leaf in jax.tree.leaves(state):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_decode_state_budget_caps_local_windows():
+    cfg = get_config("recurrentgemma-2b")          # local window 2048
+    state = decode_state_shapes(cfg, 2, 32768)
+    sizes = {leaf.shape[-2] for path, leaf in
+             jax.tree_util.tree_flatten_with_path(state)[0]
+             if path[-1].key in ("k",) if hasattr(path[-1], "key")}
+    # local-attn caches are window-capped, not budget-sized
+    assert min(sizes) <= 2048

@@ -1,0 +1,137 @@
+"""Sharding-rule unit tests: divisibility guards, axis allocation, and
+spec shapes — pure metadata, no multi-device runtime needed (the real
+meshes are exercised by the dry-run)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.specs import decode_state_shapes, model_shapes
+from repro.sharding import (batch_spec, param_shardings, param_spec, pick,
+                            state_spec, state_shardings)
+
+
+def fake_mesh(shape, axes):
+    """Abstract mesh over fake devices (never used for execution)."""
+    devs = np.array(jax.devices() * int(np.prod(shape)))[
+        : int(np.prod(shape))].reshape(shape)
+    return Mesh(devs, axes)
+
+
+MESH1 = fake_mesh((16, 16), ("data", "model"))
+MESH2 = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_pick_guards_divisibility():
+    assert pick(MESH1, 32, "model") == "model"
+    assert pick(MESH1, 10, "model") is None          # 10 % 16 != 0
+    assert pick(MESH1, 10, "model", ("data",)) is None
+    assert pick(MESH2, 64, ("pod", "data")) == ("pod", "data")
+    assert pick(MESH2, 16, ("pod", "data"), ("data",)) == "data"
+
+
+def test_pick_respects_used_axes():
+    assert pick(MESH1, 32, "model", used=("model",)) is None
+    assert pick(MESH1, 32, ("data", "model"), "model",
+                used=("data",)) == "model"
+
+
+def test_param_spec_attention():
+    assert param_spec(MESH1, "layers/0/attn/wq/w", (5120, 5120)) == \
+        P("data", "model")
+    # stacked leading dim stays replicated
+    assert param_spec(MESH1, "layers/0/attn/wo/w", (12, 5120, 5120)) == \
+        P(None, "model", "data")
+    # bias on fused head dim
+    assert param_spec(MESH1, "tail/0/attn/wq/b", (5120,)) == P("model",)
+
+
+def test_param_spec_vocab_padding_shards():
+    for arch in ("granite-moe-3b-a800m", "seamless-m4t-large-v2"):
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 256 == 0
+        s = param_spec(MESH1, "embed", (cfg.padded_vocab, cfg.d_model))
+        assert s[0] == "model"          # raw vocab 49155 would not shard
+
+
+def test_param_spec_moe_guard_falls_back():
+    # mixtral E=8: expert dim can't shard over model=16 -> d_ff does
+    s = param_spec(MESH1, "layers/0/ffn/gate_w", (8, 4096, 14336))
+    assert s == P(None, "data", "model")
+    s = param_spec(MESH1, "layers/0/ffn/down_w", (8, 14336, 4096))
+    assert s == P(None, "model", "data")
+    # 32 experts WOULD shard over model
+    s = param_spec(MESH1, "layers/0/ffn/gate_w", (32, 1536, 512))
+    assert s == P("model", "data", "model") or s[0] == "model"
+
+
+def test_param_spec_norms_replicated():
+    assert param_spec(MESH1, "layers/0/norm1/scale", (4096,)) == P()
+    assert param_spec(MESH1, "final_norm/scale", (4096,)) == P()
+
+
+def test_batch_spec():
+    assert batch_spec(MESH1, (256, 4096)) == P("data", None)
+    assert batch_spec(MESH2, (256, 4096)) == P(("pod", "data"), None)
+    # batch=1 (long_500k): replicated
+    assert batch_spec(MESH2, (1, 1)) == P(None, None)
+
+
+def test_state_spec_cache_head_fallback():
+    # kv heads 8 can't shard over model=16 -> slots take model
+    s = state_spec(MESH1, "layers/0/k", (12, 128, 8, 32768, 128))
+    assert s == P(None, "data", None, "model", None)
+    # kv heads 32 (codeqwen) shards over model; slots over nothing extra
+    s = state_spec(MESH1, "layers/0/k", (12, 128, 32, 32768, 128))
+    assert s[2] == "model" and s[1] == "data"
+    # batch=1 long_500k: slots pick up the data axes
+    s = state_spec(MESH1, "layers/0/k", (12, 1, 8, 32768, 128))
+    assert s[1] is None and s[3] is not None
+
+
+def test_state_spec_scalars_and_recurrent():
+    assert state_spec(MESH1, "t", ()) == P()
+    s = state_spec(MESH1, "layers/0/conv", (16, 128, 3, 8192))
+    assert s == P(None, "data", None, "model")
+    s = state_spec(MESH1, "layers/0/h", (16, 128, 8192, 16))  # mamba
+    assert s == P(None, "data", "model", None)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "mixtral-8x7b",
+                                  "falcon-mamba-7b", "llama-3.2-vision-90b",
+                                  "granite-moe-3b-a800m"])
+@pytest.mark.parametrize("mesh", [MESH1, MESH2])
+def test_full_trees_build_without_error(arch, mesh):
+    cfg = get_config(arch)
+    params, gates = model_shapes(cfg)
+    ps = param_shardings(mesh, params)
+    # every spec rank matches its leaf rank or is empty
+    for (path, leaf), (_, sh) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(ps)[0]):
+        assert len(sh.spec) <= len(leaf.shape), (path, sh.spec, leaf.shape)
+    state = decode_state_shapes(cfg, 128, 1024)
+    ss = state_shardings(mesh, state)
+    assert jax.tree.structure(ss) == jax.tree.structure(state)
+
+
+def test_big_param_leaves_are_sharded():
+    """No >64 MiB/device leaf may stay fully replicated on the prod mesh
+    (memory sanity for the 90B config)."""
+    cfg = get_config("llama-3.2-vision-90b")
+    params, _ = model_shapes(cfg)
+    ps = param_shardings(MESH1, params)
+    bad = []
+    for (path, leaf), (_, sh) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(ps)[0]):
+        n_shards = 1
+        for ax in jax.tree.leaves(tuple(sh.spec)):
+            if ax:
+                n_shards *= MESH1.shape[ax] if isinstance(ax, str) else \
+                    int(np.prod([MESH1.shape[a] for a in ax]))
+        per_dev = np.prod(leaf.shape) * 2 / n_shards
+        if per_dev > 64 * 2**20 and sh.spec == P():
+            bad.append(("/".join(str(p) for p in path), leaf.shape))
+    assert not bad, bad

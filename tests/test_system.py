@@ -1,0 +1,131 @@
+"""End-to-end behaviour tests for the paper's system (deliverable (c)).
+
+These validate the paper's *claims* at smoke scale:
+  1. Gate training moves the gates and reduces the capacity loss while
+     keeping KL to the teacher small (Sec 4.2).
+  2. Under an equal tight budget, TRIM-KV with trained gates preserves
+     the model's behaviour at least as well as a pure-recency heuristic
+     on a recall task (Fig. 3 structure).
+  3. The retention-score ordering drives eviction: low-beta tokens go
+     first (Alg. 1).
+  4. Checkpoint save/restore roundtrips gate training.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import ServeConfig, TrainConfig, get_smoke_config
+from repro.core.cache import cache_insert, init_cache
+from repro.core.policies import make_policy
+from repro.data import DataConfig
+from repro.data.synthetic import make_batch
+from repro.models import transformer as T
+from repro.serve.engine import build_engine
+from repro.train.trainer import train_loop
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """Train gates of a small dense model briefly with a *small* bias
+    init (so sigmoid isn't saturated and smoke-scale training moves;
+    production keeps b=18 per the paper)."""
+    cfg = dataclasses.replace(get_smoke_config("trimkv-paper-4b"),
+                              gate_bias_init=6.0)
+    train_cfg = TrainConfig(global_batch=4, seq_len=96, capacity_M=8,
+                            lambda_cap=2.0, total_steps=30,
+                            learning_rate=5e-3, warmup_steps=5)
+    data_cfg = DataConfig(batch=4, seq_len=96, tasks=("copy",), seed=0)
+    state, history = train_loop(cfg, train_cfg, data_cfg, steps=30,
+                                log_every=5, log_fn=lambda *_: None)
+    return cfg, state, history
+
+
+def test_training_reduces_capacity_loss(trained):
+    cfg, state, history = trained
+    first, last = history[0], history[-1]
+    assert last["cap"] < first["cap"] * 0.9, (first, last)
+    assert np.isfinite(last["loss"])
+    assert last["grad_norm"] > 0
+
+
+def test_training_keeps_kl_bounded(trained):
+    _, _, history = trained
+    # student stays near teacher while compressing
+    assert history[-1]["kl"] < 1.0
+
+
+def test_gates_actually_moved(trained):
+    cfg, state, _ = trained
+    fresh = T.init_gate_params(jax.random.PRNGKey(0), cfg)
+
+    def diff(a, b):
+        return float(jnp.max(jnp.abs(a - b)))
+    moved = jax.tree.map(diff, state["gates"], fresh)
+    assert max(jax.tree.leaves(moved)) > 1e-4
+
+
+def test_checkpoint_roundtrip(trained, tmp_path):
+    cfg, state, _ = trained
+    path = str(tmp_path / "gates")
+    ckpt.save(path, state["gates"], step=30)
+    assert ckpt.latest_step(path) == 30
+    restored = ckpt.restore(path, state["gates"])
+    for a, b in zip(jax.tree.leaves(state["gates"]),
+                    jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trained_trimkv_beats_recency_at_equal_budget(trained):
+    """Fig. 3 structure at smoke scale: teacher-forced answer accuracy
+    on a copy/recall task under a tight budget. TRIM-KV must match or
+    beat StreamingLLM (pure recency) since the answer needs tokens from
+    the *start* of the context, which recency evicts."""
+    cfg, state, _ = trained
+    params, gates = state["params"], state["gates"]
+    tokens, labels, _ = make_batch("copy", 11, 4, 96, cfg.vocab_size)
+    budget = 24
+    accs = {}
+    for pol in ("trimkv", "streaming_llm", "full"):
+        eng = build_engine(cfg, params, gates, budget=budget, policy=pol,
+                           recent_window=8, sink_tokens=2)
+        accs[pol] = eng.teacher_forced_accuracy(tokens, labels)
+    # the base model is untrained => absolute numbers are low; the
+    # ORDERING under eviction is the structural claim
+    assert accs["trimkv"] >= accs["streaming_llm"] - 1e-9, accs
+
+
+def test_eviction_order_follows_beta():
+    """Alg. 1: with distinct betas and a full cache, the argmin of
+    beta^(t-i) is evicted first."""
+    M = 4
+    pol = make_policy(ServeConfig(policy="trimkv", budget=M))
+    cache = init_cache(1, 1, M, 2, jnp.float32)
+    betas = [0.99, 0.2, 0.95, 0.9, 0.97]   # token 1 has beta=0.2
+    for t, b in enumerate(betas):
+        cache = cache_insert(cache, jnp.ones((1, 1, 2)),
+                             jnp.ones((1, 1, 2)), jnp.asarray([[b]]), t,
+                             pol.keep_scores, incoming_score=1.0)
+    alive = set(int(p) for p in np.asarray(cache["pos"][0, 0]) if p >= 0)
+    assert 1 not in alive                   # lowest beta evicted
+    assert alive == {0, 2, 3, 4}
+
+
+def test_decode_respects_budget_over_long_generation(trained):
+    cfg, state, _ = trained
+    eng = build_engine(cfg, state["params"], state["gates"], budget=12,
+                       policy="trimkv")
+    out = eng.generate(jnp.ones((2, 40), jnp.int32), 20)
+    assert out["ids"].shape == (2, 20)
+
+
+def test_data_pipeline_labels_are_answer_spans():
+    tokens, labels, spans = make_batch("copy", 0, 2, 64, 1000)
+    assert tokens.shape == labels.shape == (2, 64)
+    for b in range(2):
+        lab = labels[b]
+        assert (lab >= -1).all()
+        assert (lab >= 0).sum() > 0         # there is an answer to score
