@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 import os
 import time
 
@@ -135,6 +136,37 @@ def trained_system(arch: str = "trimkv-paper-4b", steps: int = TRAIN_STEPS,
                           log_fn=lambda *_: None)
     ckpt.save(path, state["gates"], step=steps)
     return cfg, params, state["gates"]
+
+
+@functools.lru_cache(maxsize=1)
+def toy_system(arch: str = "trimkv-paper-4b", seed: int = 0):
+    """Random-weight toy system (no pretraining). Decode *throughput*
+    does not depend on the weight values, so the CI smoke and the
+    dispatch-overhead benchmarks use this to avoid the 2k-step pretrain
+    of trained_system(). Deliberately smaller than bench_cfg: at 2L/d64
+    per-step device compute on CPU is ~0.1 ms, so the per-token host
+    dispatch the fused loop eliminates dominates the eager loop and the
+    fused/eager ratio actually measures dispatch overhead."""
+    cfg = dataclasses.replace(
+        get_smoke_config(arch), num_layers=2, d_model=64, d_ff=128,
+        num_heads=2, num_kv_heads=1, vocab_size=64, gate_bias_init=6.0)
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    gates = T.init_gate_params(jax.random.PRNGKey(seed + 1), cfg)
+    return cfg, params, gates
+
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_bench_json(name: str, payload) -> str:
+    """Persist a benchmark result to the repo root (the perf-trajectory
+    record, e.g. BENCH_decode.json) and return the path."""
+    path = os.path.join(REPO_ROOT, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[common] wrote {path}")
+    return path
 
 
 # ------------------------------------------------------------ measuring

@@ -1,37 +1,87 @@
-"""Table 6: decode throughput, full-cache vs heuristic vs TRIM-KV.
+"""Table 6: decode throughput, full-cache vs heuristic vs TRIM-KV —
+plus the serving hot-path matrix {eager loop, fused loop} x {xla,
+pallas} that emits BENCH_decode.json (the repo's perf-trajectory
+record).
 
 On CPU the absolute tok/s is meaningless; the *structural* claims are
 measurable: (i) TRIM-KV decode cost is O(M), independent of context
 length, while full-cache decode grows with T; (ii) TRIM-KV's decode
 update is cheaper than attention-aux policies (needs_attn=False ->
-no prob accumulation pass). We time decode steps at two context
-lengths and report tok/s plus the per-step cache-size ratio."""
+no prob accumulation pass); (iii) the fused lax.scan decode loop
+eliminates the per-token host dispatch, so fused tok/s must be a
+multiple of the eager loop at toy scale where dispatch overhead
+dominates. Pallas kernels run in interpret mode off-TPU, so their CPU
+tok/s only proves wiring, not speed.
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import print_table, trained_system
+from benchmarks.common import (print_table, toy_system, trained_system,
+                               write_bench_json)
 from repro.serve.engine import build_engine
 
 
-def _decode_tps(cfg, params, gates, policy, budget, ctx, new=16, batch=4):
-    eng = build_engine(cfg, params, gates, budget=budget, policy=policy)
+def _decode_tps(cfg, params, gates, policy, budget, ctx, new=16, batch=4,
+                fused=True, attn_impl="xla"):
+    eng = build_engine(cfg, params, gates, budget=budget, policy=policy,
+                       attn_impl=attn_impl)
     tokens = jnp.ones((batch, ctx), jnp.int32)
-    state, h = eng.prefill(tokens)
-    tok = jnp.zeros((batch,), jnp.int32)
-    state, _ = eng._decode(state, tok)            # compile
-    t0 = time.time()
-    for _ in range(new):
-        state, logits = eng._decode(state, tok)
-    jax.block_until_ready(logits)
-    dt = time.time() - t0
-    return batch * new / dt
+    eng.generate(tokens, new, fused=fused)            # compile
+    out = eng.generate(tokens, new, fused=fused)
+    return out["tok_per_sec"]
 
 
-def run(quick: bool = False):
+def decode_matrix(cfg, params, gates, *, ctx=128, budget=32, new=32,
+                  batch=4, policies=("trimkv",), pallas=True):
+    """{eager, fused} x {xla, pallas} decode tok/s grid."""
+    impls = ("xla", "pallas") if pallas else ("xla",)
+    rows = []
+    for policy in policies:
+        for attn_impl in impls:
+            for fused in (False, True):
+                tps = _decode_tps(cfg, params, gates, policy, budget, ctx,
+                                  new=new, batch=batch, fused=fused,
+                                  attn_impl=attn_impl)
+                rows.append({"policy": policy, "attn_impl": attn_impl,
+                             "mode": "fused" if fused else "eager",
+                             "ctx": ctx, "budget": budget,
+                             "max_new": new, "batch": batch,
+                             "tok_per_sec": round(tps, 2)})
+    return rows
+
+
+def run(quick: bool = False, smoke: bool = False):
+    # ---- serving hot-path matrix -> BENCH_decode.json
+    cfg, params, gates = toy_system()
+    matrix = decode_matrix(cfg, params, gates, new=16 if quick else 32,
+                           policies=("trimkv",) if quick
+                           else ("trimkv", "h2o"),
+                           pallas=True)
+    by_key = {(r["policy"], r["attn_impl"], r["mode"]):
+              r["tok_per_sec"] for r in matrix}
+    speedup = by_key[("trimkv", "xla", "fused")] / \
+        max(by_key[("trimkv", "xla", "eager")], 1e-9)
+    payload = {
+        "bench": "decode_hot_path",
+        "backend": jax.default_backend(),
+        "rows": matrix,
+        "fused_vs_eager_speedup_xla": round(speedup, 2),
+    }
+    write_bench_json("BENCH_decode.json", payload)
+    print_table("decode hot path (fused scan vs eager loop)",
+                ("policy", "attn_impl", "mode", "tok_s"),
+                [(r["policy"], r["attn_impl"], r["mode"],
+                  r["tok_per_sec"]) for r in matrix])
+    print(f"fused/eager speedup (xla, trimkv): {speedup:.2f}x")
+    if smoke:
+        return matrix
+
+    # ---- the paper's Table 6: bounded-vs-full at two context lengths
     cfg, params, gates = trained_system()
     rows = []
     ctxs = (128,) if quick else (128, 512)
@@ -48,4 +98,9 @@ def run(quick: bool = False):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="hot-path matrix only, random weights (CI)")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)

@@ -137,6 +137,16 @@ class ServeConfig:
     prefill_chunk: int = 2048
     max_decode_steps: int = 64
     temperature: float = 0.0
+    # Serving attention implementation (docs/serving.md):
+    #   "xla"    — grouped einsum over the slot cache (chunked_attention
+    #              at prefill); differentiable, SPMD-friendly.
+    #   "pallas" — flash kernels (decode_attention / retention_attention)
+    #              as the serving hot path; interpret mode off-TPU.
+    attn_impl: str = "xla"
+    # Fused on-device decode: Engine.generate / teacher_forced_accuracy
+    # run the whole token loop under one lax.scan dispatch (O(1) host
+    # round-trips per generation) instead of one dispatch per token.
+    fused: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

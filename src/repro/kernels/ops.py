@@ -60,14 +60,32 @@ def capacity_loss(beta, M: float, *, impl="auto"):
 
 
 def decode_attention(q_t, k_cache, v_cache, pos, t, *, window=0,
+                     new_kv=None, return_probs=False, m_block=512,
                      impl="auto"):
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "pallas":
         return decode_attention_pallas(q_t, k_cache, v_cache, pos, t,
-                                       window=window,
+                                       window=window, new_kv=new_kv,
+                                       return_probs=return_probs,
+                                       m_block=m_block,
                                        interpret=_interpret())
     if impl == "ref":
         return _ref.decode_attention_ref(q_t, k_cache, v_cache, pos, t,
-                                         window=window)
+                                         window=window, new_kv=new_kv,
+                                         return_probs=return_probs)
+    if impl == "xla":
+        # the production einsum path over the slot cache (core.cache)
+        from repro.core.cache import decode_attend
+        cache = {"k": k_cache, "v": v_cache, "pos": pos}
+        res = decode_attend(q_t, cache, window=window, t=t, new_kv=new_kv)
+        # decode_attend accumulates in f32; cast back so the three impls
+        # are dtype-interchangeable
+        if new_kv is not None:
+            out, probs, p_new = res
+            out = out.astype(q_t.dtype)
+            return (out, probs, p_new) if return_probs else out
+        out, probs = res
+        out = out.astype(q_t.dtype)
+        return (out, probs) if return_probs else out
     raise ValueError(impl)

@@ -53,11 +53,27 @@ def capacity_loss_ref(beta, M: float):
     return jnp.mean(jnp.mean(jnp.maximum(S - M, 0.0) * inv_t, axis=-1))
 
 
-def decode_attention_ref(q_t, k_cache, v_cache, pos, t, *, window=0):
-    """q_t: [B,Hq,D]; caches [B,Hkv,M,D]; pos [B,Hkv,M]."""
+def decode_attention_ref(q_t, k_cache, v_cache, pos, t, *, window=0,
+                         new_kv=None, return_probs=False):
+    """q_t: [B,Hq,D]; caches [B,Hkv,M,D]; pos [B,Hkv,M].
+
+    new_kv: optional (k_t, v_t) [B,Hkv,D] in-flight token attended as a
+    provisional slot at position t. return_probs: also return the
+    normalized probs over the M cache slots (and the new token's mass
+    when new_kv is given) — mirrors decode_attention_pallas.
+    """
     B, Hq, D = q_t.shape
     Hkv, M = k_cache.shape[1], k_cache.shape[2]
     group = Hq // Hkv
+    if new_kv is not None:
+        k_new, v_new = new_kv
+        k_cache = jnp.concatenate(
+            [k_cache, k_new[:, :, None].astype(k_cache.dtype)], axis=2)
+        v_cache = jnp.concatenate(
+            [v_cache, v_new[:, :, None].astype(v_cache.dtype)], axis=2)
+        pos = jnp.concatenate(
+            [pos, jnp.broadcast_to(jnp.asarray(t, jnp.int32),
+                                   (B, Hkv, 1))], axis=2)
     k = jnp.repeat(k_cache, group, axis=1).astype(jnp.float32)
     v = jnp.repeat(v_cache, group, axis=1).astype(jnp.float32)
     ok = pos >= 0
@@ -69,4 +85,9 @@ def decode_attention_ref(q_t, k_cache, v_cache, pos, t, *, window=0):
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(valid, p, 0.0)
     out = jnp.einsum("bhm,bhmd->bhd", p, v)
-    return out.astype(q_t.dtype)
+    out = out.astype(q_t.dtype)
+    if not return_probs:
+        return out
+    if new_kv is not None:
+        return out, p[..., :M], p[..., M]
+    return out, p

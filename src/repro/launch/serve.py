@@ -27,6 +27,13 @@ def main():
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--chunked", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--attn-impl", choices=("xla", "pallas"),
+                    default="xla",
+                    help="serving attention: XLA einsum path or the "
+                         "Pallas flash kernels (interpret mode off-TPU)")
+    ap.add_argument("--eager", action="store_true",
+                    help="per-token Python decode loop instead of the "
+                         "fused lax.scan program")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -35,7 +42,8 @@ def main():
     params = T.init_params(kp, cfg)
     gates = T.init_gate_params(kg, cfg)
     eng = build_engine(cfg, params, gates, budget=args.budget,
-                       policy=args.policy)
+                       policy=args.policy, attn_impl=args.attn_impl,
+                       fused=not args.eager)
     tokens, _, _ = make_batch("copy", args.seed, args.batch,
                               args.prompt_len, cfg.vocab_size)
     extra = {}

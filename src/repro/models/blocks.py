@@ -475,9 +475,12 @@ def _mamba_train(p, cfg, x):
 # ======================================================= block: decode
 
 
-def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy):
+def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy,
+                       attn_impl="xla"):
     """x_t: [B, d]; t: scalar int32 absolute position. Returns
-    (x_out [B,d], new_state, probs_or_None)."""
+    (x_out [B,d], new_state, probs_or_None). attn_impl: "xla" (grouped
+    einsum over the slot cache) or "pallas" (flash-decode kernel;
+    interpret mode off-TPU)."""
     if kind in ("global", "local", "cross"):
         cache = state["cache"] if kind == "cross" else state
         normed = rmsnorm_apply(p["norm1"], x_t, cfg.norm_eps)
@@ -492,8 +495,17 @@ def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy):
         # Alg. 1: attend over (cache ∪ provisional new token), THEN
         # evict-if-full — one pass over the old cache serves both the
         # attention read and the eviction blend (§Perf iteration 4)
-        out, probs, p_new = decode_attend(q_t, cache, window=window, t=t,
-                                          new_kv=(k_t, v_t))
+        if attn_impl == "pallas":
+            # lazy import: the pallas toolchain loads only when the
+            # serving path actually selects it (ops.py convention)
+            from repro.kernels import ops as kernel_ops
+            out, probs, p_new = kernel_ops.decode_attention(
+                q_t, cache["k"], cache["v"], cache["pos"], t,
+                window=window, new_kv=(k_t, v_t), return_probs=True,
+                impl="pallas")
+        else:
+            out, probs, p_new = decode_attend(q_t, cache, window=window,
+                                              t=t, new_kv=(k_t, v_t))
         cache = policy.decode_update(cache, _probs_to_kv(probs, cfg))
         inc = 1.0 if policy.name == "trimkv" else None
         aux_new = (_probs_to_kv(p_new[..., None], cfg)[..., 0]
@@ -569,11 +581,14 @@ def _mamba_step(p, cfg, x_t, state):
 
 
 def apply_block_prefill(p, g, cfg, kind, x, state, *, policy, budget,
-                        memory=None, obs_window=32, q_offset=0):
+                        memory=None, obs_window=32, q_offset=0,
+                        attn_impl="xla"):
     """Single-shot prefill over x [B,T,d] with an empty prior state:
     full (chunked) attention over the sequence, then compress the chunk
     into the bounded cache via top-M keep scores. memory: [B,S,d] cross
-    tokens (vision / encoder output). Returns (x_out, new_state, aux)."""
+    tokens (vision / encoder output). Returns (x_out, new_state, aux).
+    attn_impl "pallas" routes the sequence attention through the
+    retention flash kernel (q_offset must be 0; interpret off-TPU)."""
     B, T, _ = x.shape
     if kind in ("global", "local", "cross"):
         cache_in = state["cache"] if kind == "cross" else state
@@ -581,8 +596,19 @@ def apply_block_prefill(p, g, cfg, kind, x, state, *, policy, budget,
         positions = q_offset + jnp.broadcast_to(jnp.arange(T)[None], (B, T))
         q, k, v = _qkv(p["attn"], cfg, normed, positions)
         window = cfg.window if kind == "local" else 0
-        out = _attend_full(cfg, q, k, v, causal=True, window=window,
-                           q_offset=q_offset)
+        # pallas prefill only where _attend_full would run the plain
+        # path anyway: q_offset 0 and no context-parallel shard_map
+        # (the kernel has no CP story — routing it there would run
+        # full unsharded attention on every device)
+        if attn_impl == "pallas" and isinstance(q_offset, int) \
+                and q_offset == 0 and not cfg.context_parallel:
+            from repro.kernels import ops as kernel_ops
+            out = kernel_ops.retention_attention(q, k, v, None, causal=True,
+                                                 window=window,
+                                                 impl="pallas")
+        else:
+            out = _attend_full(cfg, q, k, v, causal=True, window=window,
+                               q_offset=q_offset)
         if g is not None and cfg.trimkv:
             beta_c = jnp.moveaxis(gates_lib.gate_beta(g, normed), 1, 2)
         else:

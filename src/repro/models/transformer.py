@@ -234,6 +234,7 @@ def prefill(params, gate_params, cfg, tokens, state, policy, serve_cfg, *,
     memory = _memory_from_inputs(params, cfg, extra_inputs)
     h = jnp.take(params["embed"], tokens, axis=0)
     T = tokens.shape[1]
+    attn_impl = getattr(serve_cfg, "attn_impl", "xla")
 
     def unit_body(h, xs):
         up, ug, st = xs
@@ -243,7 +244,7 @@ def prefill(params, gate_params, cfg, tokens, state, policy, serve_cfg, *,
             h, ns, _ = blocks.apply_block_prefill(
                 up[i], g, cfg, kind, h, st[i], policy=policy,
                 budget=serve_cfg.budget, memory=memory,
-                obs_window=serve_cfg.obs_window)
+                obs_window=serve_cfg.obs_window, attn_impl=attn_impl)
             new_states.append(ns)
         return h, tuple(new_states)
 
@@ -262,7 +263,7 @@ def prefill(params, gate_params, cfg, tokens, state, policy, serve_cfg, *,
         h, ns, _ = blocks.apply_block_prefill(
             params["tail"][i], g, cfg, kind, h, state["tail"][i],
             policy=policy, budget=serve_cfg.budget, memory=memory,
-            obs_window=serve_cfg.obs_window)
+            obs_window=serve_cfg.obs_window, attn_impl=attn_impl)
         new_tail.append(ns)
     new_state["tail"] = tuple(new_tail)
     h = rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
@@ -325,7 +326,8 @@ def prefill_chunk(params, gate_params, cfg, tokens, state, policy,
     return new_state, h[:, -1]
 
 
-def decode_step(params, gate_params, cfg, state, token, policy):
+def decode_step(params, gate_params, cfg, state, token, policy,
+                attn_impl="xla"):
     """token: [B] int32. Returns (new_state, logits [B, Vp] f32)."""
     unit, U, R, tail = _unit_and_counts(cfg)
     x = jnp.take(params["embed"], token, axis=0)           # [B,d]
@@ -337,7 +339,8 @@ def decode_step(params, gate_params, cfg, state, token, policy):
         for i, kind in enumerate(unit):
             g = ug[i] if ug is not None else None
             x, ns, _ = blocks.apply_block_decode(
-                up[i], g, cfg, kind, x, st[i], t, policy=policy)
+                up[i], g, cfg, kind, x, st[i], t, policy=policy,
+                attn_impl=attn_impl)
             new_states.append(ns)
         return x, tuple(new_states)
 
@@ -355,10 +358,66 @@ def decode_step(params, gate_params, cfg, state, token, policy):
         g = (gate_params or {}).get("tail", (None,) * len(tail))[i]
         x, ns, _ = blocks.apply_block_decode(
             params["tail"][i], g, cfg, kind, x, state["tail"][i], t,
-            policy=policy)
+            policy=policy, attn_impl=attn_impl)
         new_tail.append(ns)
     new_state["tail"] = tuple(new_tail)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
-    logits = (x @ params["unembed"]["w"]).astype(jnp.float32)
-    mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
-    return new_state, jnp.where(mask, logits, -1e30)
+    return new_state, compute_logits(params, cfg, x)
+
+
+def sample_token(logits, *, greedy, temperature, key):
+    """logits [B,Vp] f32 -> (token [B] int32, new_key). Greedy argmax or
+    temperature sampling; key is split only on the sampling path so a
+    seeded eager loop and the fused scan consume identical key streams."""
+    if greedy or temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), key
+    key, sk = jax.random.split(key)
+    tok = jax.random.categorical(sk, logits / temperature).astype(jnp.int32)
+    return tok, key
+
+
+def decode_loop(params, gate_params, cfg, state, first_token, n_steps,
+                policy, *, greedy=True, temperature=0.0, rng=None,
+                attn_impl="xla"):
+    """Fused multi-token decode: the whole sample -> embed -> layers ->
+    evict -> logits cycle runs under one jax.lax.scan, so a generation
+    is a single device program instead of n_steps host dispatches.
+
+    first_token: [B] int32 — the token produced from the prefill logits
+    (it is EMITTED first, then fed through the model, matching the eager
+    loop). n_steps must be static (scan length). Returns
+    (new_state, ids [B, n_steps] int32).
+
+    Token-for-token identical to the eager per-step loop: greedy argmax,
+    or temperature sampling with the PRNG key threaded through the scan
+    carry (same split sequence as splitting once per step eagerly).
+    """
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+
+    def body(carry, _):
+        state, tok, key = carry
+        state, logits = decode_step(params, gate_params, cfg, state, tok,
+                                    policy, attn_impl=attn_impl)
+        nxt, key = sample_token(logits, greedy=greedy,
+                                temperature=temperature, key=key)
+        return (state, nxt, key), tok
+
+    (state, _, _), toks = jax.lax.scan(
+        body, (state, first_token, rng), None, length=n_steps)
+    return state, jnp.moveaxis(toks, 0, 1)                 # [B, n_steps]
+
+
+def teacher_force_loop(params, gate_params, cfg, state, tokens, policy,
+                       attn_impl="xla"):
+    """Fused teacher-forced scoring: feed gold tokens [B,L] through the
+    decode cycle under one lax.scan. Returns (new_state, preds [B,L])
+    where preds[:, i] is the argmax prediction made AFTER consuming
+    tokens[:, i] (i.e. the model's guess for position t0+i+1)."""
+    def body(state, tok):
+        state, logits = decode_step(params, gate_params, cfg, state, tok,
+                                    policy, attn_impl=attn_impl)
+        return state, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    state, preds = jax.lax.scan(body, state, jnp.moveaxis(tokens, 0, 1))
+    return state, jnp.moveaxis(preds, 0, 1)

@@ -5,6 +5,24 @@ The engine jit-compiles one prefill and one decode closure per
 (config, policy, budget) and reuses them across requests. Greedy or
 temperature sampling. `teacher_forced_accuracy` scores gold answer spans
 under eviction — the measurement used by the paper-table benchmarks.
+
+Decode-path architecture (docs/serving.md):
+  * fused (default): the whole generation runs as ONE compiled device
+    program — T.decode_loop scans sample -> embed -> layers -> evict ->
+    logits with the state donated, so Engine.generate issues O(1)
+    dispatches regardless of max_new. `serve_cfg.fused=False` (or
+    `generate(..., fused=False)`) falls back to the eager per-token
+    Python loop (one dispatch per token) — kept as the parity/benchmark
+    reference.
+  * attn_impl: "xla" routes decode attention through the grouped einsum
+    in core.cache and prefill through chunked_attention; "pallas" routes
+    them through the flash kernels (kernels.decode_attention /
+    kernels.retention_attention), which also emit the per-slot probs and
+    in-flight-token mass the eviction policies consume.
+
+`dispatch_count` counts host->device program launches issued by this
+engine (incremented once per jitted-closure call) — the O(1)-dispatch
+claim is asserted on it by tests/test_decode_fused.py.
 """
 from __future__ import annotations
 
@@ -29,6 +47,11 @@ class Engine:
         self.gates = gate_params
         self.serve = serve_cfg
         self.policy = make_policy(serve_cfg)
+        self.dispatch_count = 0
+        impl = serve_cfg.attn_impl
+        if impl not in ("xla", "pallas"):
+            raise ValueError(f"unknown attn_impl {impl!r}; "
+                             f"expected 'xla' or 'pallas'")
 
         def _prefill(tokens, state, extra):
             return T.prefill(params, gate_params, cfg, tokens, state,
@@ -41,11 +64,33 @@ class Engine:
 
         def _decode(state, token):
             return T.decode_step(params, gate_params, cfg, state, token,
-                                 self.policy)
+                                 self.policy, attn_impl=impl)
+
+        def _decode_loop(state, h_last, rng, n_steps, greedy):
+            first = self._first_token(h_last)
+            return T.decode_loop(params, gate_params, cfg, state, first,
+                                 n_steps, self.policy, greedy=greedy,
+                                 temperature=serve_cfg.temperature,
+                                 rng=rng, attn_impl=impl)
+
+        def _tf_loop(state, h_last, tokens):
+            preds0 = self._first_token(h_last)
+            state, preds = T.teacher_force_loop(params, gate_params, cfg,
+                                                state, tokens, self.policy,
+                                                attn_impl=impl)
+            return state, jnp.concatenate([preds0[:, None], preds], axis=1)
 
         self._prefill = jax.jit(_prefill, donate_argnums=(1,))
         self._prefill_chunk = jax.jit(_prefill_chunk, donate_argnums=(1,))
         self._decode = jax.jit(_decode, donate_argnums=(0,))
+        self._decode_loop = jax.jit(_decode_loop, static_argnums=(3, 4),
+                                    donate_argnums=(0,))
+        self._tf_loop = jax.jit(_tf_loop, donate_argnums=(0,))
+
+    def _first_token(self, h_last):
+        """Greedy token from the prefill's last hidden state [B,d]."""
+        logits = T.compute_logits(self.params, self.cfg, h_last)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     # ------------------------------------------------------------ state
 
@@ -61,15 +106,18 @@ class Engine:
         state = self.fresh_state(B)
         extra = extra_inputs or {}
         if not chunked or Tn <= self.serve.prefill_chunk:
+            self.dispatch_count += 1
             return self._prefill(tokens, state, extra)
         C = self.serve.prefill_chunk
         h_last = None
         # first chunk builds cross-attn memory; later chunks reuse it
         for s in range(0, Tn - Tn % C, C):
+            self.dispatch_count += 1
             state, h_last = self._prefill_chunk(tokens[:, s:s + C], state,
                                                 extra)
         rem = Tn % C
         if rem:
+            self.dispatch_count += 1
             state, h_last = self._prefill_chunk(tokens[:, Tn - rem:], state,
                                                 extra)
         return state, h_last
@@ -77,25 +125,34 @@ class Engine:
     # ----------------------------------------------------------- decode
 
     def generate(self, tokens, max_new: int, extra_inputs=None,
-                 chunked: bool = False, greedy: bool = True, seed: int = 0):
-        """Returns dict with generated ids [B, max_new] and timing."""
+                 chunked: bool = False, greedy: bool = True, seed: int = 0,
+                 fused: Optional[bool] = None):
+        """Returns dict with generated ids [B, max_new] and timing.
+        fused=None defers to serve_cfg.fused; fused=False runs the eager
+        per-token reference loop (one dispatch per token)."""
+        fused = self.serve.fused if fused is None else fused
         state, h_last = self.prefill(tokens, extra_inputs, chunked)
-        logits0 = (h_last @ self.params["unembed"]["w"]).astype(jnp.float32)
-        mask = jnp.arange(self.cfg.padded_vocab) < self.cfg.vocab_size
-        logits0 = jnp.where(mask, logits0, -1e30)
-        tok = jnp.argmax(logits0, axis=-1).astype(jnp.int32)
-        outs = []
         key = jax.random.PRNGKey(seed)
+        greedy = greedy or self.serve.temperature == 0.0
+        if fused:
+            t0 = time.time()
+            self.dispatch_count += 1
+            state, ids = self._decode_loop(state, h_last, key, max_new,
+                                           greedy)
+            jax.block_until_ready(ids)
+            dt = time.time() - t0
+            return {"ids": np.asarray(ids), "decode_sec": dt,
+                    "tok_per_sec": ids.size / max(dt, 1e-9)}
+        tok = self._first_token(h_last)
+        outs = []
         t0 = time.time()
         for i in range(max_new):
             outs.append(tok)
+            self.dispatch_count += 1
             state, logits = self._decode(state, tok)
-            if greedy or self.serve.temperature == 0.0:
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            else:
-                key, sk = jax.random.split(key)
-                tok = jax.random.categorical(
-                    sk, logits / self.serve.temperature).astype(jnp.int32)
+            tok, key = T.sample_token(logits, greedy=greedy,
+                                      temperature=self.serve.temperature,
+                                      key=key)
         jax.block_until_ready(tok)
         dt = time.time() - t0
         ids = jnp.stack(outs, axis=1)
@@ -106,7 +163,8 @@ class Engine:
                                 chunked: bool = False):
         """Feed gold tokens; measure argmax-match on positions where
         labels >= 0 (the benchmark metric: answer-span accuracy under
-        eviction). tokens/labels: [B,T]."""
+        eviction). tokens/labels: [B,T]. Runs as one fused scan after
+        the prefill (2 dispatches total for the unchunked path)."""
         tokens = jnp.asarray(tokens)
         labels = np.asarray(labels)
         B, Tn = tokens.shape
@@ -114,23 +172,19 @@ class Engine:
         prefix_len = max(first_label, 1)
         state, h_last = self.prefill(tokens[:, :prefix_len], extra_inputs,
                                      chunked)
-        logits = (h_last @ self.params["unembed"]["w"]).astype(jnp.float32)
-        mask = jnp.arange(self.cfg.padded_vocab) < self.cfg.vocab_size
-        logits = jnp.where(mask, logits, -1e30)
-        correct, counted = 0, 0
-        preds = np.asarray(jnp.argmax(logits, -1))
-        for t in range(prefix_len - 1, Tn - 1):
-            # prediction at position t supervises labels[:, t]
-            lab = labels[:, t]
-            sel = lab >= 0
-            correct += int((preds[sel] == lab[sel]).sum())
-            counted += int(sel.sum())
-            state, logits = self._decode(state, tokens[:, t + 1])
-            preds = np.asarray(jnp.argmax(logits, -1))
-        lab = labels[:, Tn - 1]
-        sel = lab >= 0
-        correct += int((preds[sel] == lab[sel]).sum())
-        counted += int(sel.sum())
+        if prefix_len < Tn:
+            self.dispatch_count += 1
+            state, preds = self._tf_loop(state, h_last,
+                                         tokens[:, prefix_len:])
+        else:
+            preds = self._first_token(h_last)[:, None]
+        # preds[:, i] predicts position prefix_len-1+i; labels[:, t] is
+        # supervised by the prediction made at position t
+        preds = np.asarray(preds)
+        labs = labels[:, prefix_len - 1:]
+        sel = labs >= 0
+        correct = int((preds[sel] == labs[sel]).sum())
+        counted = int(sel.sum())
         return correct / max(counted, 1)
 
 

@@ -154,3 +154,47 @@ def test_decode_attention_matches_ref(B, Hq, Hkv, M, D):
                                     impl="ref")
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,M,D,m_block", [
+    (1, 2, 1, 48, 32, 512),
+    (2, 4, 2, 130, 64, 512),
+    # multi-block grid: cross-block flash-probs rescale + padded tail
+    # (130 slots over 32-wide blocks -> n_m=5, 30 pad slots)
+    (2, 4, 2, 130, 64, 32),
+])
+@pytest.mark.parametrize("window", [0, 24])
+def test_decode_attention_probs_and_inflight_token(B, Hq, Hkv, M, D,
+                                                   m_block, window):
+    """The serving interface: probs over the M slots + the in-flight
+    token's received mass, consistent across pallas / ref / xla — these
+    are the eviction-policy inputs, so all three must agree."""
+    k1, k2, k3, k4, k5 = jax.random.split(KEY, 5)
+    q = rand(k1, (B, Hq, D))
+    kc = rand(k2, (B, Hkv, M, D))
+    vc = rand(k3, (B, Hkv, M, D))
+    kn = rand(k4, (B, Hkv, D))
+    vn = rand(k5, (B, Hkv, D))
+    pos = np.full((B, Hkv, M), -1, np.int32)
+    rng = np.random.RandomState(1)
+    for b in range(B):
+        for h in range(Hkv):
+            n = rng.randint(M // 2, M)
+            pos[b, h, :n] = rng.choice(M * 2, size=n, replace=False)
+    pos = jnp.asarray(pos)
+    outs = {}
+    for impl in ("pallas", "ref", "xla"):
+        outs[impl] = ops.decode_attention(q, kc, vc, pos, 2 * M,
+                                          window=window, new_kv=(kn, vn),
+                                          return_probs=True,
+                                          m_block=m_block, impl=impl)
+    for impl in ("ref", "xla"):
+        for got, want in zip(outs["pallas"], outs[impl]):
+            np.testing.assert_allclose(np.asarray(got, np.float32),
+                                       np.asarray(want, np.float32),
+                                       atol=2e-5, rtol=2e-5,
+                                       err_msg=impl)
+    out, probs, p_new = outs["pallas"]
+    # normalized: cache mass + new-token mass = 1 per query head
+    total = np.asarray(probs).sum(-1) + np.asarray(p_new)
+    np.testing.assert_allclose(total, 1.0, atol=1e-5)

@@ -14,7 +14,10 @@ Invariants (paper Sec 3.2 / 4):
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cache import cache_insert, cache_len, decode_attend, \
     init_cache
