@@ -174,11 +174,11 @@ def write_bench_json(name: str, payload) -> str:
 
 def accuracy(cfg, params, gates, *, policy: str, budget: int, task: str,
              n_examples: int = 8, seq: int = SEQ, seed: int = 100,
-             chunked: bool = False):
+             chunked: bool = False, attn_impl: str = "xla"):
     """Teacher-forced answer-span accuracy under eviction."""
     eng = build_engine(cfg, params, gates, budget=budget, policy=policy,
                        recent_window=max(budget // 4, 4), sink_tokens=4,
-                       prefill_chunk=32)
+                       prefill_chunk=32, attn_impl=attn_impl)
     tokens, labels, _ = make_batch(task, seed, n_examples, seq,
                                    cfg.vocab_size)
     return eng.teacher_forced_accuracy(tokens, labels, chunked=chunked)

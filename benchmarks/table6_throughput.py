@@ -1,17 +1,17 @@
 """Table 6: decode throughput, full-cache vs heuristic vs TRIM-KV —
-plus the serving hot-path matrix {eager loop, fused loop} x {xla,
-pallas} that emits BENCH_decode.json (the repo's perf-trajectory
-record).
+plus the serving hot-path matrices {eager loop, fused loop} x {xla,
+pallas} for decode (BENCH_decode.json) AND chunked prefill
+(BENCH_prefill.json) — the repo's perf-trajectory records.
 
 On CPU the absolute tok/s is meaningless; the *structural* claims are
 measurable: (i) TRIM-KV decode cost is O(M), independent of context
 length, while full-cache decode grows with T; (ii) TRIM-KV's decode
 update is cheaper than attention-aux policies (needs_attn=False ->
-no prob accumulation pass); (iii) the fused lax.scan decode loop
-eliminates the per-token host dispatch, so fused tok/s must be a
-multiple of the eager loop at toy scale where dispatch overhead
-dominates. Pallas kernels run in interpret mode off-TPU, so their CPU
-tok/s only proves wiring, not speed.
+no prob accumulation pass); (iii) the fused lax.scan loops (decode AND
+chunked prefill) eliminate the per-token / per-chunk host dispatch, so
+fused tok/s must be a multiple of the eager loop at toy scale where
+dispatch overhead dominates. Pallas kernels run in interpret mode
+off-TPU, so their CPU tok/s only proves wiring, not speed.
 """
 from __future__ import annotations
 
@@ -55,6 +55,49 @@ def decode_matrix(cfg, params, gates, *, ctx=128, budget=32, new=32,
     return rows
 
 
+def _prefill_tps(cfg, params, gates, *, n_chunks, chunk=16, batch=2,
+                 budget=32, policy="trimkv", fused=True, attn_impl="xla",
+                 repeat=3):
+    """Chunked-prefill tokens/sec; T is chosen with a remainder so the
+    padded-tail path is what gets measured."""
+    eng = build_engine(cfg, params, gates, budget=budget, policy=policy,
+                       attn_impl=attn_impl, prefill_chunk=chunk)
+    Tn = n_chunks * chunk - 3
+    tokens = jnp.ones((batch, Tn), jnp.int32)
+    _, h_warm = eng.prefill(tokens, chunked=True, fused=fused)  # compile
+    jax.block_until_ready(h_warm)   # don't let warm-up bleed into t0
+    t0 = time.time()
+    for _ in range(repeat):
+        _, h = eng.prefill(tokens, chunked=True, fused=fused)
+    jax.block_until_ready(h)
+    return Tn * batch * repeat / max(time.time() - t0, 1e-9)
+
+
+def prefill_matrix(cfg, params, gates, *, chunk=16, batch=2, budget=32,
+                   chunk_counts=(8, 32), policies=("trimkv",),
+                   pallas=True):
+    """{eager, fused} x {xla, pallas} chunked-prefill tok/s grid over
+    chunk counts (dispatch overhead grows with n_chunks, so the fused
+    speedup must grow with it)."""
+    impls = ("xla", "pallas") if pallas else ("xla",)
+    rows = []
+    for policy in policies:
+        for attn_impl in impls:
+            for n_chunks in chunk_counts:
+                for fused in (False, True):
+                    tps = _prefill_tps(cfg, params, gates,
+                                       n_chunks=n_chunks, chunk=chunk,
+                                       batch=batch, budget=budget,
+                                       policy=policy, fused=fused,
+                                       attn_impl=attn_impl)
+                    rows.append({"policy": policy, "attn_impl": attn_impl,
+                                 "mode": "fused" if fused else "eager",
+                                 "n_chunks": n_chunks, "chunk": chunk,
+                                 "budget": budget, "batch": batch,
+                                 "tok_per_sec": round(tps, 2)})
+    return rows
+
+
 def run(quick: bool = False, smoke: bool = False):
     # ---- serving hot-path matrix -> BENCH_decode.json
     cfg, params, gates = toy_system()
@@ -78,8 +121,33 @@ def run(quick: bool = False, smoke: bool = False):
                 [(r["policy"], r["attn_impl"], r["mode"],
                   r["tok_per_sec"]) for r in matrix])
     print(f"fused/eager speedup (xla, trimkv): {speedup:.2f}x")
+
+    # ---- chunked-prefill hot-path matrix -> BENCH_prefill.json
+    # same policy set as the decode matrix so the two bench records in
+    # the CI artifact stay comparable row-for-row
+    pmatrix = prefill_matrix(cfg, params, gates,
+                             chunk_counts=(8,) if quick else (8, 32),
+                             policies=("trimkv",) if quick
+                             else ("trimkv", "h2o"))
+    n_top = max(r["n_chunks"] for r in pmatrix)
+    pby = {(r["policy"], r["attn_impl"], r["mode"], r["n_chunks"]):
+           r["tok_per_sec"] for r in pmatrix}
+    pspeedup = pby[("trimkv", "xla", "fused", n_top)] / \
+        max(pby[("trimkv", "xla", "eager", n_top)], 1e-9)
+    write_bench_json("BENCH_prefill.json", {
+        "bench": "chunked_prefill_hot_path",
+        "backend": jax.default_backend(),
+        "rows": pmatrix,
+        "fused_vs_eager_speedup_xla": round(pspeedup, 2),
+    })
+    print_table("chunked prefill hot path (fused scan vs eager loop)",
+                ("policy", "attn_impl", "mode", "n_chunks", "tok_s"),
+                [(r["policy"], r["attn_impl"], r["mode"], r["n_chunks"],
+                  r["tok_per_sec"]) for r in pmatrix])
+    print(f"prefill fused/eager speedup (xla, trimkv, {n_top} chunks): "
+          f"{pspeedup:.2f}x")
     if smoke:
-        return matrix
+        return matrix, pmatrix
 
     # ---- the paper's Table 6: bounded-vs-full at two context lengths
     cfg, params, gates = trained_system()

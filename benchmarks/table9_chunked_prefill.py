@@ -2,28 +2,43 @@
 (surrogate task note: see table3_longmem.py — `procedural` is the
 learned long-recall task at this scale)
 long prompts are prefilled in chunks; the cache is compressed to the
-budget after every chunk. Compare policies with chunked prefill."""
+budget after every chunk. Compare policies with chunked prefill.
+
+The prefill runs the fused one-dispatch scan (engine default) and
+honors ServeConfig.attn_impl: --attn-impl pallas routes every chunk
+through the flash chunk-attention kernel (interpret mode off-TPU) —
+same eviction victims as the XLA path, asserted by
+tests/test_prefill_fused.py."""
 from __future__ import annotations
+
+import argparse
 
 from benchmarks.common import accuracy, print_table, trained_system
 
 POLS = ("trimkv", "snapkv", "h2o", "streaming_llm")
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, attn_impl: str = "xla"):
     cfg, params, gates = trained_system()
     rows = []
     full = accuracy(cfg, params, gates, policy="full", budget=256,
-                    task="procedural", seq=128, chunked=True)
+                    task="procedural", seq=128, chunked=True,
+                    attn_impl=attn_impl)
     rows.append(("full", 256, full, 0.0))
     for pol in POLS[:2] if quick else POLS:
         acc = accuracy(cfg, params, gates, policy=pol, budget=32,
-                       task="procedural", seq=128, chunked=True)
+                       task="procedural", seq=128, chunked=True,
+                       attn_impl=attn_impl)
         rows.append((pol, 32, acc, (acc - full) / max(full, 1e-9) * 100))
-    print_table("table9_chunked_prefill",
+    print_table(f"table9_chunked_prefill (attn_impl={attn_impl})",
                 ("policy", "budget", "acc", "delta_vs_full_pct"), rows)
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--attn-impl", default="xla",
+                    choices=("xla", "pallas"))
+    args = ap.parse_args()
+    run(quick=args.quick, attn_impl=args.attn_impl)

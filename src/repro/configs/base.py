@@ -139,13 +139,16 @@ class ServeConfig:
     temperature: float = 0.0
     # Serving attention implementation (docs/serving.md):
     #   "xla"    — grouped einsum over the slot cache (chunked_attention
-    #              at prefill); differentiable, SPMD-friendly.
-    #   "pallas" — flash kernels (decode_attention / retention_attention)
-    #              as the serving hot path; interpret mode off-TPU.
+    #              at prefill, _chunk_attend at chunked prefill);
+    #              differentiable, SPMD-friendly.
+    #   "pallas" — flash kernels (decode_attention / retention_attention
+    #              / chunk_attention) as the serving hot path; interpret
+    #              mode off-TPU.
     attn_impl: str = "xla"
-    # Fused on-device decode: Engine.generate / teacher_forced_accuracy
-    # run the whole token loop under one lax.scan dispatch (O(1) host
-    # round-trips per generation) instead of one dispatch per token.
+    # Fused on-device loops: Engine.generate / teacher_forced_accuracy
+    # run the whole token loop — and Engine.prefill(chunked=True) the
+    # whole chunk loop — under one lax.scan dispatch each (O(1) host
+    # round-trips) instead of one dispatch per token / per chunk.
     fused: bool = True
 
 

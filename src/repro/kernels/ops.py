@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.capacity_loss import capacity_loss_pallas
+from repro.kernels.chunk_attention import chunk_attention_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.retention_attention import retention_attention_pallas
 
@@ -29,20 +30,43 @@ def _interpret() -> bool:
 
 
 def retention_attention(q, k, v, log_beta=None, *, causal=True, window=0,
-                        impl="auto"):
+                        q_offset=0, impl="auto"):
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "xla"
     if impl == "pallas":
         return retention_attention_pallas(q, k, v, log_beta, causal=causal,
-                                          window=window,
+                                          window=window, q_offset=q_offset,
                                           interpret=_interpret())
     if impl == "ref":
         return _ref.retention_attention_ref(q, k, v, log_beta,
-                                            causal=causal, window=window)
+                                            causal=causal, window=window,
+                                            q_offset=q_offset)
     if impl == "xla":
         from repro.models.common import chunked_attention
         return chunked_attention(q, k, v, log_beta=log_beta, causal=causal,
-                                 window=window)
+                                 window=window, q_offset=q_offset)
+    raise ValueError(impl)
+
+
+def chunk_attention(q, k_c, v_c, cache, chunk_pos, *, window=0,
+                    need_probs=True, impl="auto"):
+    """Chunk-query attention over (bounded cache ∪ chunk) for chunked
+    prefill. q: [B,C,Hq,D]; k_c,v_c: [B,C,Hkv,D]; cache: the slot cache
+    dict (k/v/pos used); chunk_pos: [C] int32, -1 = padded tail.
+    Returns (out [B,C,Hq,D], probs_cache [B,Hkv,C,M] — None when the
+    pallas impl is told need_probs=False: the kernel then skips the
+    probs outputs entirely (needs_attn=False policies discard them)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "pallas":
+        return chunk_attention_pallas(q, k_c, v_c, cache["k"], cache["v"],
+                                      cache["pos"], chunk_pos,
+                                      window=window, need_probs=need_probs,
+                                      interpret=_interpret())
+    if impl in ("xla", "ref"):
+        # the materialized [B,Hq,C,M+C] reference (bench-scale path)
+        from repro.models.blocks import _chunk_attend
+        return _chunk_attend(q, k_c, v_c, cache, chunk_pos, window)
     raise ValueError(impl)
 
 

@@ -10,8 +10,9 @@ NEG_INF = -1e30
 
 
 def retention_attention_ref(q, k, v, log_beta=None, *, causal=True,
-                            window=0):
-    """q: [B,Tq,Hq,D]; k,v: [B,Tk,Hkv,D]; log_beta: [B,Tk,Hkv]|None."""
+                            window=0, q_offset=0):
+    """q: [B,Tq,Hq,D]; k,v: [B,Tk,Hkv,D]; log_beta: [B,Tk,Hkv]|None.
+    q_offset: absolute position of q[0]."""
     B, Tq, Hq, D = q.shape
     Tk, Hkv = k.shape[1], k.shape[2]
     group = Hq // Hkv
@@ -19,7 +20,7 @@ def retention_attention_ref(q, k, v, log_beta=None, *, causal=True,
     vr = jnp.repeat(v, group, axis=2)
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                    kr.astype(jnp.float32)) / np.sqrt(D)
-    dist = jnp.arange(Tq)[:, None] - jnp.arange(Tk)[None, :]
+    dist = (q_offset + jnp.arange(Tq))[:, None] - jnp.arange(Tk)[None, :]
     mask = jnp.ones((Tq, Tk), bool)
     if causal:
         mask = mask & (dist >= 0)

@@ -23,9 +23,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, lb_ref, o_ref, m_scr, l_scr, acc_scr,
-                  *, sm_scale, causal, window, q_block, kv_block, n_kv,
-                  t_q, t_kv, use_beta):
+def _flash_kernel(off_ref, q_ref, k_ref, v_ref, lb_ref, o_ref, m_scr,
+                  l_scr, acc_scr, *, sm_scale, causal, window, q_block,
+                  kv_block, n_kv, t_q, t_kv, use_beta):
     ki = pl.program_id(2)
     qi = pl.program_id(1)
 
@@ -41,12 +41,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, lb_ref, o_ref, m_scr, l_scr, acc_scr,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * sm_scale
 
-    t_pos = qi * q_block + jax.lax.broadcasted_iota(
+    # row/col are TILE indices (bounds checks); absolute query position
+    # adds q_offset (SMEM scalar, so traced shard offsets work)
+    row = qi * q_block + jax.lax.broadcasted_iota(
         jnp.int32, (q_block, kv_block), 0)
     i_pos = ki * kv_block + jax.lax.broadcasted_iota(
         jnp.int32, (q_block, kv_block), 1)
+    t_pos = off_ref[0] + row
     dist = t_pos - i_pos
-    mask = (i_pos < t_kv) & (t_pos < t_q)
+    mask = (i_pos < t_kv) & (row < t_q)
     if causal:
         mask = mask & (dist >= 0)
     if window > 0:
@@ -74,9 +77,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, lb_ref, o_ref, m_scr, l_scr, acc_scr,
 
 
 def retention_attention_pallas(q, k, v, log_beta=None, *, causal=True,
-                               window=0, q_block=128, kv_block=128,
-                               interpret=True):
+                               window=0, q_offset=0, q_block=128,
+                               kv_block=128, interpret=True):
     """q: [B,Tq,Hq,D]; k,v: [B,Tk,Hkv,D]; log_beta: [B,Tk,Hkv] or None.
+    q_offset: absolute position of q[0] (python int or traced scalar —
+    the context-parallel shard prefill passes axis_index * T_loc).
     Returns [B,Tq,Hq,D]."""
     B, Tq, Hq, D = q.shape
     Tk, Hkv = k.shape[1], k.shape[2]
@@ -107,11 +112,13 @@ def retention_attention_pallas(q, k, v, log_beta=None, *, causal=True,
         window=window, q_block=q_block, kv_block=kv_block, n_kv=n_kv,
         t_q=Tq, t_kv=Tk, use_beta=use_beta)
 
+    off = jnp.full((1,), q_offset, jnp.int32)
     grid = (B * Hq, n_q, n_kv)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, q_block, D), lambda bh, qi, ki: (bh, qi, 0)),
             pl.BlockSpec((1, kv_block, D),
                          lambda bh, qi, ki: (bh // group, ki, 0)),
@@ -129,6 +136,6 @@ def retention_attention_pallas(q, k, v, log_beta=None, *, causal=True,
             pltpu.VMEM((q_block, D), jnp.float32),
         ],
         interpret=interpret,
-    )(qh, kh, vh, lbh)
+    )(off, qh, kh, vh, lbh)
     out = out[:, :Tq].reshape(B, Hq, Tq, D)
     return jnp.moveaxis(out, 1, 2)

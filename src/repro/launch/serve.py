@@ -26,6 +26,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--chunked", action="store_true")
+    ap.add_argument("--prefill-chunk", type=int, default=2048,
+                    help="chunk width for --chunked prefill (the fused "
+                         "scan pads the tail chunk to this width)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--attn-impl", choices=("xla", "pallas"),
                     default="xla",
@@ -43,6 +46,7 @@ def main():
     gates = T.init_gate_params(kg, cfg)
     eng = build_engine(cfg, params, gates, budget=args.budget,
                        policy=args.policy, attn_impl=args.attn_impl,
+                       prefill_chunk=args.prefill_chunk,
                        fused=not args.eager)
     tokens, _, _ = make_batch("copy", args.seed, args.batch,
                               args.prompt_len, cfg.vocab_size)

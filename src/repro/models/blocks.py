@@ -292,7 +292,7 @@ def _qkv(p, cfg, normed, positions):
 
 
 def _attend_full(cfg, q, k, v, *, log_beta=None, causal=True, window=0,
-                 q_offset=0):
+                 q_offset=0, attn_impl="xla"):
     """Full-sequence attention, context-parallel when configured.
 
     Context parallelism (§Perf train iteration 2): shard_map over the
@@ -301,10 +301,25 @@ def _attend_full(cfg, q, k, v, *, log_beta=None, causal=True, window=0,
     q_dim). Each shard runs the same streaming-block attention on T/cp
     query rows at the right absolute offset. Falls back to the plain
     path when no CP mesh is registered or T doesn't divide.
+
+    attn_impl "pallas" runs the retention flash kernel instead of the
+    XLA streaming path — on the plain path AND inside each CP shard:
+    the kernel takes the (traced) absolute q_offset, so the shard
+    prefill no longer silently falls back to XLA.
     """
     kw = dict(log_beta=log_beta, causal=causal, window=window,
               q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
               unroll=cfg.unroll_layers)
+
+    def attend(q_l, k_f, v_f, lb_f, off):
+        if attn_impl == "pallas":
+            from repro.kernels import ops as kernel_ops
+            return kernel_ops.retention_attention(
+                q_l, k_f, v_f, lb_f, causal=causal, window=window,
+                q_offset=off, impl="pallas")
+        return chunked_attention(q_l, k_f, v_f, q_offset=off,
+                                 **{**kw, "log_beta": lb_f})
+
     T = q.shape[1]
     mesh = None
     if cfg.context_parallel:
@@ -312,7 +327,7 @@ def _attend_full(cfg, q, k, v, *, log_beta=None, causal=True, window=0,
         mesh = get_cp_mesh()
     if mesh is None or "model" not in mesh.shape or \
             T % mesh.shape["model"] != 0:
-        return chunked_attention(q, k, v, q_offset=q_offset, **kw)
+        return attend(q, k, v, log_beta, q_offset)
     from jax.sharding import PartitionSpec as P
     cp = mesh.shape["model"]
     dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
@@ -321,18 +336,12 @@ def _attend_full(cfg, q, k, v, *, log_beta=None, causal=True, window=0,
 
     def local_attn(q_l, k_f, v_f, lb_f):
         off = jax.lax.axis_index("model") * T_loc
-        return chunked_attention(q_l, k_f, v_f,
-                                 q_offset=q_offset + off,
-                                 **{**kw, "log_beta": lb_f})
+        if log_beta is None:
+            lb_f = None
+        return attend(q_l, k_f, v_f, lb_f, q_offset + off)
 
     lb = log_beta if log_beta is not None else \
         jnp.zeros((q.shape[0], T, k.shape[2]), jnp.float32)
-    if log_beta is None:
-        def local_attn(q_l, k_f, v_f, lb_f):  # noqa: F811 — ungated
-            off = jax.lax.axis_index("model") * T_loc
-            return chunked_attention(q_l, k_f, v_f,
-                                     q_offset=q_offset + off,
-                                     **{**kw, "log_beta": None})
     return jax.shard_map(
         local_attn, mesh=mesh,
         in_specs=(P(dp, "model", None, None), P(dp), P(dp), P(dp)),
@@ -588,7 +597,8 @@ def apply_block_prefill(p, g, cfg, kind, x, state, *, policy, budget,
     into the bounded cache via top-M keep scores. memory: [B,S,d] cross
     tokens (vision / encoder output). Returns (x_out, new_state, aux).
     attn_impl "pallas" routes the sequence attention through the
-    retention flash kernel (q_offset must be 0; interpret off-TPU)."""
+    retention flash kernel (any q_offset, even traced — the CP shard
+    path runs the kernel per shard; interpret off-TPU)."""
     B, T, _ = x.shape
     if kind in ("global", "local", "cross"):
         cache_in = state["cache"] if kind == "cross" else state
@@ -596,19 +606,11 @@ def apply_block_prefill(p, g, cfg, kind, x, state, *, policy, budget,
         positions = q_offset + jnp.broadcast_to(jnp.arange(T)[None], (B, T))
         q, k, v = _qkv(p["attn"], cfg, normed, positions)
         window = cfg.window if kind == "local" else 0
-        # pallas prefill only where _attend_full would run the plain
-        # path anyway: q_offset 0 and no context-parallel shard_map
-        # (the kernel has no CP story — routing it there would run
-        # full unsharded attention on every device)
-        if attn_impl == "pallas" and isinstance(q_offset, int) \
-                and q_offset == 0 and not cfg.context_parallel:
-            from repro.kernels import ops as kernel_ops
-            out = kernel_ops.retention_attention(q, k, v, None, causal=True,
-                                                 window=window,
-                                                 impl="pallas")
-        else:
-            out = _attend_full(cfg, q, k, v, causal=True, window=window,
-                               q_offset=q_offset)
+        # pallas routes through _attend_full too: the retention kernel
+        # honors a (traced) q_offset, so the context-parallel shard
+        # prefill runs the kernel per shard instead of falling back
+        out = _attend_full(cfg, q, k, v, causal=True, window=window,
+                           q_offset=q_offset, attn_impl=attn_impl)
         if g is not None and cfg.trimkv:
             beta_c = jnp.moveaxis(gates_lib.gate_beta(g, normed), 1, 2)
         else:
@@ -710,15 +712,19 @@ def _mamba_prefill(p, cfg, x, state):
 # ================================================ block: chunked prefill
 
 
-def _chunk_attend(q, k_c, v_c, cache, t0, window, cfg):
+def _chunk_attend(q, k_c, v_c, cache, chunk_pos, window):
     """Attention of a prefill chunk over (existing cache ∪ chunk), with
-    per-head cache positions. Materializes [B,Hq,C,M+C] — bench-scale
-    path only (paper Sec B.3 chunked-prefill setting); the single-shot
-    prefill and dry-run use chunked_attention instead.
+    per-head cache positions. Materializes [B,Hq,C,M+C] — the XLA
+    reference for the flash kernel in kernels/chunk_attention.py (paper
+    Sec B.3 chunked-prefill setting); the single-shot prefill and
+    dry-run use chunked_attention instead.
 
-    q: [B,C,Hq,D]; k_c,v_c: [B,C,Hkv,D]. Returns (out [B,C,Hq,D],
-    probs_cache [B,Hkv,C,M] — per-chunk-query attention over the cache
-    region, for H2O-style accumulation)."""
+    q: [B,C,Hq,D]; k_c,v_c: [B,C,Hkv,D]; chunk_pos: [C] int32 absolute
+    positions of the chunk tokens, -1 marking padded tail positions
+    (padded queries get zero output / zero probs; padded keys are never
+    attended). Returns (out [B,C,Hq,D], probs_cache [B,Hkv,C,M] —
+    per-chunk-query attention over the cache region, for H2O-style
+    accumulation)."""
     B, C, Hq, D = q.shape
     Hkv = k_c.shape[2]
     M = cache["pos"].shape[-1]
@@ -729,7 +735,6 @@ def _chunk_attend(q, k_c, v_c, cache, t0, window, cfg):
     vals = jnp.concatenate(
         [cache["v"].astype(jnp.float32),
          jnp.moveaxis(v_c, 1, 2).astype(jnp.float32)], axis=2)
-    chunk_pos = t0 + jnp.arange(C)
     pos = jnp.concatenate(
         [cache["pos"],
          jnp.broadcast_to(chunk_pos[None, None], (B, Hkv, C))], axis=2)
@@ -752,17 +757,44 @@ def _chunk_attend(q, k_c, v_c, cache, t0, window, cfg):
 
 
 def apply_block_prefill_chunk(p, g, cfg, kind, x, state, t0, *, policy,
-                              obs_window=32, memory=None):
+                              obs_window=32, memory=None, n_valid=None,
+                              attn_impl="xla"):
     """Continue prefill with chunk x [B,C,d] given existing state.
-    t0: absolute position of the chunk's first token."""
+    t0: absolute position of the chunk's first token.
+
+    n_valid: number of real tokens in the chunk (None = all C). The
+    tail positions beyond n_valid are PADDING: they carry position -1,
+    are masked out of attention, contribute zero policy aux, and can
+    never win a cache slot — so one closure shape serves any prompt
+    length. attn_impl "pallas" routes the chunk attention through the
+    flash kernel (kernels.chunk_attention; interpret off-TPU)."""
     B, C, _ = x.shape
     if kind in ("global", "local", "cross"):
         cache = state["cache"] if kind == "cross" else state
         normed = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
-        positions = t0 + jnp.broadcast_to(jnp.arange(C)[None], (B, C))
+        idx = jnp.arange(C)
+        positions = t0 + jnp.broadcast_to(idx[None], (B, C))
+        if n_valid is None:
+            chunk_pos = (t0 + idx).astype(jnp.int32)
+            t_end = t0 + C - 1
+        else:
+            chunk_pos = jnp.where(idx < n_valid, t0 + idx, -1).astype(
+                jnp.int32)
+            t_end = t0 + n_valid - 1
         q, k, v = _qkv(p["attn"], cfg, normed, positions)
         window = cfg.window if kind == "local" else 0
-        out, probs_cache = _chunk_attend(q, k, v, cache, t0, window, cfg)
+        if attn_impl == "pallas":
+            # lazy import: the pallas toolchain loads only when the
+            # serving path actually selects it (ops.py convention).
+            # needs_attn=False policies discard probs_cache, so the
+            # kernel skips those outputs entirely
+            from repro.kernels import ops as kernel_ops
+            out, probs_cache = kernel_ops.chunk_attention(
+                q, k, v, cache, chunk_pos, window=window,
+                need_probs=policy.needs_attn, impl="pallas")
+        else:
+            out, probs_cache = _chunk_attend(q, k, v, cache, chunk_pos,
+                                             window)
         if g is not None and cfg.trimkv:
             beta_c = jnp.moveaxis(gates_lib.gate_beta(g, normed), 1, 2)
         else:
@@ -770,15 +802,17 @@ def apply_block_prefill_chunk(p, g, cfg, kind, x, state, t0, *, policy,
         aux_c = jnp.zeros((B, cfg.num_kv_heads, C), jnp.float32)
         if policy.needs_attn:
             W = min(obs_window, C)
-            aux_c = _obs_probs(q[:, -W:], k, positions, t0 + C - W, window)
-            # accumulate chunk-query attention mass into cache aux (H2O)
+            nv = C if n_valid is None else n_valid
+            aux_c = _obs_probs_chunk(q, k, chunk_pos, nv, t_end - W + 1,
+                                     window, W)
+            # accumulate chunk-query attention mass into cache aux (H2O);
+            # padded queries were zeroed in the attend, so they add none
             cache = dict(cache)
             cache["aux"] = cache["aux"] + probs_cache.sum(axis=2)
         k_c = jnp.moveaxis(k, 1, 2)
         v_c = jnp.moveaxis(v, 1, 2)
-        pos_c = jnp.broadcast_to(positions[:, None],
-                                 (B, cfg.num_kv_heads, C)).astype(jnp.int32)
-        t_end = t0 + C - 1
+        pos_c = jnp.broadcast_to(chunk_pos[None, None],
+                                 (B, cfg.num_kv_heads, C))
         chunk_scores = policy.chunk_scores(pos_c=pos_c, beta_c=beta_c,
                                            aux_c=aux_c, k_c=k_c, t=t_end)
         new_cache = cache_topm_merge(cache, k_c, v_c, beta_c, pos_c, aux_c,
@@ -808,14 +842,22 @@ def apply_block_prefill_chunk(p, g, cfg, kind, x, state, t0, *, policy,
         i = jax.nn.sigmoid(dense_apply(p["lru_wx"], xb).astype(jnp.float32))
         a_log = -RG_LRU_C * jax.nn.softplus(p["lru_lam"]) * r
         bx = i * xb.astype(jnp.float32)
+        if n_valid is not None:
+            # padded steps become the identity recurrence (a=1, input 0)
+            # so the carried h after C steps IS h at the last real token
+            valid = (jnp.arange(C) < n_valid)[None, :, None]
+            a_log = jnp.where(valid, a_log, 0.0)
+            bx = jnp.where(valid, bx, 0.0)
         h_seq = _rg_lru_scan(a_log, bx, state["h"])
         x = x + dense_apply(p["out"], h_seq.astype(x.dtype) * gate)
         normed2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
         ffn_out, _ = _ffn_apply(p["ffn"], normed2, cfg)
-        new_state = {"h": h_seq[:, -1], "conv": ext[:, -(cfg.conv_width - 1):]}
+        new_state = {"h": h_seq[:, -1],
+                     "conv": _conv_tail_chunk(ext, cfg.conv_width, n_valid)}
         return x + ffn_out, new_state, None
     if kind == "mamba":
-        out, new_state = _mamba_prefill_chunk(p, cfg, x, state)
+        out, new_state = _mamba_prefill_chunk(p, cfg, x, state,
+                                              n_valid=n_valid)
         return x + out, new_state, None
     raise ValueError(kind)
 
@@ -826,7 +868,17 @@ def _conv_with_history(ext, w, b, W, C):
     return out + b
 
 
-def _mamba_prefill_chunk(p, cfg, x, state):
+def _conv_tail_chunk(ext, W, n_valid):
+    """Conv state after a (possibly padded) chunk: the W-1 pre-conv
+    inputs ending at the last REAL token. ext: [B, (W-1)+C, ch]; real
+    inputs occupy ext[:, W-1 : W-1+n_valid]."""
+    if n_valid is None:
+        return ext[:, -(W - 1):]
+    B, _, ch = ext.shape
+    return jax.lax.dynamic_slice(ext, (0, n_valid, 0), (B, W - 1, ch))
+
+
+def _mamba_prefill_chunk(p, cfg, x, state, n_valid=None):
     B, C, _ = x.shape
     di, n, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
     normed = rmsnorm_apply(p["norm"], x, cfg.norm_eps)
@@ -843,6 +895,11 @@ def _mamba_prefill_chunk(p, cfg, x, state):
     dA = jnp.exp(dt[..., None] * A)
     dBx = (dt * xs.astype(jnp.float32))[..., None] * \
         Bm[:, :, None, :].astype(jnp.float32)
+    if n_valid is not None:
+        # padded steps: h = 1*h + 0 so h_last is h at the last real token
+        valid = (jnp.arange(C) < n_valid)[None, :, None, None]
+        dA = jnp.where(valid, dA, 1.0)
+        dBx = jnp.where(valid, dBx, 0.0)
 
     def step(h, inputs):
         dA_t, dBx_t, C_t = inputs
@@ -854,8 +911,42 @@ def _mamba_prefill_chunk(p, cfg, x, state):
     h_last, ys = jax.lax.scan(step, state["h"], xs_seq)
     y = jnp.moveaxis(ys, 0, 1) + xs.astype(jnp.float32) * p["D"]
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    new_state = {"h": h_last, "conv": ext[:, -(cfg.conv_width - 1):]}
+    new_state = {"h": h_last,
+                 "conv": _conv_tail_chunk(ext, cfg.conv_width, n_valid)}
     return dense_apply(p["out_proj"], y), new_state
+
+
+def _obs_probs_chunk(q, k, chunk_pos, n_valid, obs_start, window, W):
+    """Padding-robust obs-window signal for chunked prefill: mean
+    attention over the chunk keys of the last W REAL chunk queries.
+    The W query rows are cut with a static-shape dynamic_slice ending
+    at the last real token (start = clamp(n_valid - W)), so the work
+    stays [B,Hq,W,C] — NOT [B,Hq,C,C] — and the padded tail chunk
+    reuses the same closure. q: [B,C,Hq,D]; k: [B,C,Hkv,D]; chunk_pos:
+    [C] int32 with -1 marking padding -> [B,Hkv,C]."""
+    B, C, Hq, D = q.shape
+    Hkv = k.shape[2]
+    group = Hq // Hkv
+    start = jnp.clip(jnp.asarray(n_valid, jnp.int32) - W, 0, C - W)
+    q_obs = jax.lax.dynamic_slice_in_dim(q, start, W, axis=1)
+    q_pos = jax.lax.dynamic_slice_in_dim(chunk_pos, start, W, axis=0)
+    kr = jnp.repeat(k, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q_obs.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / np.sqrt(D)
+    qpos = q_pos[None, None, :, None]
+    kpos = chunk_pos[None, None, None, :]
+    dist = qpos - kpos
+    mask = (kpos >= 0) & (dist >= 0)
+    if window > 0:
+        mask = mask & (dist < window)
+    s = jnp.where(mask, s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    probs = jnp.where(mask, probs, 0.0)
+    # padded rows (q_pos=-1, n_valid < W) drop out of the obs mean
+    obs = (q_pos >= obs_start) & (q_pos >= 0)                  # [W]
+    n_obs = jnp.maximum(jnp.sum(obs.astype(jnp.float32)), 1.0)
+    probs = jnp.sum(probs * obs[None, None, :, None], axis=2) / n_obs
+    return probs.reshape(B, Hkv, group, C).mean(axis=2)        # [B,Hkv,C]
 
 
 def _obs_probs(q_obs, k, positions, obs_start, window):

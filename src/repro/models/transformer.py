@@ -270,18 +270,18 @@ def prefill(params, gate_params, cfg, tokens, state, policy, serve_cfg, *,
     return new_state, h[:, -1]
 
 
-def prefill_chunk(params, gate_params, cfg, tokens, state, policy,
-                  serve_cfg, *, extra_inputs=None):
-    """Continue prefill with a chunk of tokens [B,C] against existing
-    state (chunked-prefill setting, paper Sec B.3). First chunk must be
-    preceded by memory setup: for cross-attn families call prefill() on
-    the first chunk or pass extra_inputs here to (re)build memory K/V."""
+def _prefill_chunk_step(params, gate_params, cfg, tokens, state, policy,
+                        serve_cfg, memory, n_valid=None):
+    """One chunk of the chunked-prefill pipeline: embed -> per-layer
+    chunk attention + top-M eviction merge -> final norm. tokens: [B,C];
+    n_valid: real-token count (None = all C; the padded tail positions
+    are masked everywhere — see blocks.apply_block_prefill_chunk).
+    Returns (new_state, h_last [B,d] — the LAST REAL token's hidden)."""
     unit, U, R, tail = _unit_and_counts(cfg)
-    extra_inputs = extra_inputs or {}
-    memory = _memory_from_inputs(params, cfg, extra_inputs)
     h = jnp.take(params["embed"], tokens, axis=0)
     t0 = state["t"]
     C = tokens.shape[1]
+    attn_impl = getattr(serve_cfg, "attn_impl", "xla")
 
     def unit_body(h, xs):
         up, ug, st = xs
@@ -295,11 +295,13 @@ def prefill_chunk(params, gate_params, cfg, tokens, state, policy,
                         "xv": mem_kv[1]}
             h, ns, _ = blocks.apply_block_prefill_chunk(
                 up[i], g, cfg, kind, h, st_i, t0, policy=policy,
-                obs_window=serve_cfg.obs_window, memory=memory)
+                obs_window=serve_cfg.obs_window, memory=memory,
+                n_valid=n_valid, attn_impl=attn_impl)
             new_states.append(ns)
         return h, tuple(new_states)
 
-    new_state = {"t": t0 + C}
+    nv = C if n_valid is None else n_valid
+    new_state = {"t": t0 + nv}
     if R > 0:
         glayers = (gate_params or {}).get("layers")
         h, stacked = jax.lax.scan(
@@ -319,11 +321,63 @@ def prefill_chunk(params, gate_params, cfg, tokens, state, policy,
                     "xv": mem_kv[1]}
         h, ns, _ = blocks.apply_block_prefill_chunk(
             params["tail"][i], g, cfg, kind, h, st_i, t0, policy=policy,
-            obs_window=serve_cfg.obs_window, memory=memory)
+            obs_window=serve_cfg.obs_window, memory=memory,
+            n_valid=n_valid, attn_impl=attn_impl)
         new_tail.append(ns)
     new_state["tail"] = tuple(new_tail)
     h = rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
-    return new_state, h[:, -1]
+    if n_valid is None:
+        h_last = h[:, -1]
+    else:
+        h_last = jax.lax.dynamic_index_in_dim(h, nv - 1, axis=1,
+                                              keepdims=False)
+    return new_state, h_last
+
+
+def prefill_chunk(params, gate_params, cfg, tokens, state, policy,
+                  serve_cfg, *, n_valid=None, extra_inputs=None):
+    """Continue prefill with a chunk of tokens [B,C] against existing
+    state (chunked-prefill setting, paper Sec B.3). First chunk must be
+    preceded by memory setup: for cross-attn families call prefill() on
+    the first chunk or pass extra_inputs here to (re)build memory K/V.
+    n_valid: number of real tokens (pad+mask tail chunks so every chunk
+    shares ONE closure shape regardless of the prompt length)."""
+    extra_inputs = extra_inputs or {}
+    memory = _memory_from_inputs(params, cfg, extra_inputs)
+    return _prefill_chunk_step(params, gate_params, cfg, tokens, state,
+                               policy, serve_cfg, memory, n_valid=n_valid)
+
+
+def prefill_chunk_loop(params, gate_params, cfg, chunks, n_valid, state,
+                       policy, serve_cfg, *, extra_inputs=None):
+    """Fused chunked prefill: drive the whole chunk pipeline (embed ->
+    chunk attention -> eviction merge, per chunk) under ONE jax.lax.scan
+    so a long-prompt prefill is a single device program — O(1) host
+    dispatches like the fused decode loop, instead of one per chunk.
+
+    chunks: [n_chunks, B, C] (prompt reshaped, tail padded to C);
+    n_valid: [n_chunks] int32 real-token counts (== C except the tail).
+    All chunks share one closure shape, so any prompt length T compiles
+    exactly once per n_chunks. Returns (state, h_last [B,d] of the last
+    real token). Token-exact vs the eager per-chunk loop: both run
+    _prefill_chunk_step on identical padded inputs."""
+    extra_inputs = extra_inputs or {}
+    memory = _memory_from_inputs(params, cfg, extra_inputs)
+    B = chunks.shape[1]
+    dtype = params["embed"].dtype
+
+    def body(carry, xs):
+        state, _ = carry
+        tokens, nv = xs
+        state, h_last = _prefill_chunk_step(params, gate_params, cfg,
+                                            tokens, state, policy,
+                                            serve_cfg, memory, n_valid=nv)
+        return (state, h_last), None
+
+    h0 = jnp.zeros((B, cfg.d_model), dtype)
+    (state, h_last), _ = jax.lax.scan(body, (state, h0),
+                                      (chunks, n_valid))
+    return state, h_last
 
 
 def decode_step(params, gate_params, cfg, state, token, policy,

@@ -17,8 +17,15 @@ Decode-path architecture (docs/serving.md):
   * attn_impl: "xla" routes decode attention through the grouped einsum
     in core.cache and prefill through chunked_attention; "pallas" routes
     them through the flash kernels (kernels.decode_attention /
-    kernels.retention_attention), which also emit the per-slot probs and
-    in-flight-token mass the eviction policies consume.
+    kernels.retention_attention / kernels.chunk_attention), which also
+    emit the per-slot probs and in-flight-token mass the eviction
+    policies consume.
+  * chunked prefill mirrors decode: `serve_cfg.fused` runs the whole
+    per-chunk pipeline (chunk attention + top-M eviction merge) under
+    one lax.scan (T.prefill_chunk_loop, donated state) — O(1) dispatches
+    for any prompt length. The prompt is padded to whole chunks with the
+    tail positions masked, so the eager reference loop also compiles a
+    single closure shape regardless of T % prefill_chunk.
 
 `dispatch_count` counts host->device program launches issued by this
 engine (incremented once per jitted-closure call) — the O(1)-dispatch
@@ -57,10 +64,15 @@ class Engine:
             return T.prefill(params, gate_params, cfg, tokens, state,
                              self.policy, serve_cfg, extra_inputs=extra)
 
-        def _prefill_chunk(tokens, state, extra):
+        def _prefill_chunk(tokens, n_valid, state, extra):
             return T.prefill_chunk(params, gate_params, cfg, tokens, state,
-                                   self.policy, serve_cfg,
+                                   self.policy, serve_cfg, n_valid=n_valid,
                                    extra_inputs=extra)
+
+        def _prefill_chunk_loop(chunks, n_valid, state, extra):
+            return T.prefill_chunk_loop(params, gate_params, cfg, chunks,
+                                        n_valid, state, self.policy,
+                                        serve_cfg, extra_inputs=extra)
 
         def _decode(state, token):
             return T.decode_step(params, gate_params, cfg, state, token,
@@ -81,7 +93,9 @@ class Engine:
             return state, jnp.concatenate([preds0[:, None], preds], axis=1)
 
         self._prefill = jax.jit(_prefill, donate_argnums=(1,))
-        self._prefill_chunk = jax.jit(_prefill_chunk, donate_argnums=(1,))
+        self._prefill_chunk = jax.jit(_prefill_chunk, donate_argnums=(2,))
+        self._prefill_chunk_loop = jax.jit(_prefill_chunk_loop,
+                                           donate_argnums=(2,))
         self._decode = jax.jit(_decode, donate_argnums=(0,))
         self._decode_loop = jax.jit(_decode_loop, static_argnums=(3, 4),
                                     donate_argnums=(0,))
@@ -99,27 +113,43 @@ class Engine:
 
     # ---------------------------------------------------------- prefill
 
-    def prefill(self, tokens, extra_inputs=None, chunked: bool = False):
-        """tokens: [B,T] np/jnp. Returns (state, last_hidden)."""
+    def prefill(self, tokens, extra_inputs=None, chunked: bool = False,
+                fused: Optional[bool] = None):
+        """tokens: [B,T] np/jnp. Returns (state, last_hidden).
+
+        Chunked path: the prompt is padded up to a whole number of
+        prefill_chunk-sized chunks (tail positions masked), so every
+        chunk — remainder included — shares ONE closure shape. With
+        fused (default: serve_cfg.fused) the whole per-chunk pipeline
+        runs under one lax.scan dispatch (T.prefill_chunk_loop);
+        fused=False keeps the eager one-dispatch-per-chunk reference."""
         tokens = jnp.asarray(tokens)
         B, Tn = tokens.shape
         state = self.fresh_state(B)
         extra = extra_inputs or {}
-        if not chunked or Tn <= self.serve.prefill_chunk:
+        C = self.serve.prefill_chunk
+        if not chunked or Tn <= C:
             self.dispatch_count += 1
             return self._prefill(tokens, state, extra)
-        C = self.serve.prefill_chunk
+        fused = self.serve.fused if fused is None else fused
+        n_chunks = -(-Tn // C)
+        pad = n_chunks * C - Tn
+        if pad:
+            tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+        n_valid = np.full((n_chunks,), C, np.int32)
+        n_valid[-1] = C - pad
+        if fused:
+            chunks = jnp.moveaxis(tokens.reshape(B, n_chunks, C), 1, 0)
+            self.dispatch_count += 1
+            return self._prefill_chunk_loop(chunks, jnp.asarray(n_valid),
+                                            state, extra)
         h_last = None
         # first chunk builds cross-attn memory; later chunks reuse it
-        for s in range(0, Tn - Tn % C, C):
+        for i in range(n_chunks):
             self.dispatch_count += 1
-            state, h_last = self._prefill_chunk(tokens[:, s:s + C], state,
-                                                extra)
-        rem = Tn % C
-        if rem:
-            self.dispatch_count += 1
-            state, h_last = self._prefill_chunk(tokens[:, Tn - rem:], state,
-                                                extra)
+            state, h_last = self._prefill_chunk(
+                tokens[:, i * C:(i + 1) * C],
+                jnp.asarray(n_valid[i]), state, extra)
         return state, h_last
 
     # ----------------------------------------------------------- decode
@@ -131,7 +161,8 @@ class Engine:
         fused=None defers to serve_cfg.fused; fused=False runs the eager
         per-token reference loop (one dispatch per token)."""
         fused = self.serve.fused if fused is None else fused
-        state, h_last = self.prefill(tokens, extra_inputs, chunked)
+        state, h_last = self.prefill(tokens, extra_inputs, chunked,
+                                     fused=fused)
         key = jax.random.PRNGKey(seed)
         greedy = greedy or self.serve.temperature == 0.0
         if fused:

@@ -84,6 +84,59 @@ def test_chunked_attention_matches_full_ref():
                                    atol=2e-5, rtol=2e-5, err_msg=str(kw))
 
 
+@pytest.mark.parametrize("q_offset", [16, 100])
+@pytest.mark.parametrize("window", [0, 24])
+def test_retention_attention_pallas_q_offset(q_offset, window):
+    """The kernel honors a nonzero absolute query offset (the
+    context-parallel shard prefill path) — static and traced."""
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    B, Hq, Hkv, D = 2, 4, 2, 32
+    Tq, Tk = 16, 128
+    q = rand(k1, (B, Tq, Hq, D))
+    k = rand(k2, (B, Tk, Hkv, D))
+    v = rand(k3, (B, Tk, Hkv, D))
+    lb = -jnp.abs(rand(k4, (B, Tk, Hkv))) * 0.05
+    want = ops.retention_attention(q, k, v, lb, window=window,
+                                   q_offset=q_offset, impl="ref")
+    got = ops.retention_attention(q, k, v, lb, window=window,
+                                  q_offset=q_offset, impl="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    # traced offset (what the CP shard passes: axis_index * T_loc)
+    traced = jax.jit(lambda off: ops.retention_attention(
+        q, k, v, lb, window=window, q_offset=off, impl="pallas"))
+    np.testing.assert_allclose(np.asarray(traced(jnp.int32(q_offset))),
+                               np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_prefill_pallas_no_xla_fallback_at_offset(monkeypatch):
+    """apply_block_prefill with attn_impl='pallas' and a nonzero
+    q_offset must run the kernel, not silently fall back to the XLA
+    streaming path (the pre-PR behavior on the shard prefill path)."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.core.policies import TrimKV
+    from repro.models import blocks
+    from repro.models import transformer as T
+
+    cfg = dataclasses.replace(
+        get_smoke_config("trimkv-paper-4b"), num_layers=1, d_model=64,
+        d_ff=128, num_heads=4, num_kv_heads=2, vocab_size=64)
+    p = blocks.init_block(jax.random.PRNGKey(0), cfg, "global")
+    state = blocks.init_block_state(cfg, "global", 1, 16, jnp.bfloat16)
+    x = rand(KEY, (1, 24, cfg.d_model), jnp.bfloat16)
+
+    def _boom(*a, **kw):
+        raise AssertionError("fell back to chunked_attention (XLA)")
+
+    monkeypatch.setattr(blocks, "chunked_attention", _boom)
+    out, _, _ = blocks.apply_block_prefill(
+        p, None, cfg, "global", x, state, policy=TrimKV(), budget=16,
+        q_offset=32, attn_impl="pallas")
+    assert out.shape == x.shape
+
+
 def test_chunked_attention_q_offset():
     k1, k2, k3 = jax.random.split(KEY, 3)
     B, Hq, D, T = 1, 2, 32, 64
@@ -198,3 +251,97 @@ def test_decode_attention_probs_and_inflight_token(B, Hq, Hkv, M, D,
     # normalized: cache mass + new-token mass = 1 per query head
     total = np.asarray(probs).sum(-1) + np.asarray(p_new)
     np.testing.assert_allclose(total, 1.0, atol=1e-5)
+
+
+# ------------------------------------------------------ chunk attention
+
+
+def _random_cache(B, Hkv, M, D, key, seed=0):
+    k1, k2 = jax.random.split(key)
+    pos = np.full((B, Hkv, M), -1, np.int32)
+    rng = np.random.RandomState(seed)
+    for b in range(B):
+        for h in range(Hkv):
+            n = rng.randint(M // 2, M)
+            pos[b, h, :n] = rng.choice(200, size=n, replace=False)
+    return {"k": rand(k1, (B, Hkv, M, D)), "v": rand(k2, (B, Hkv, M, D)),
+            "pos": jnp.asarray(pos)}
+
+
+@pytest.mark.parametrize("B,C,Hq,Hkv,M,D,window,n_pad", [
+    (2, 16, 4, 2, 24, 32, 0, 0),
+    (1, 40, 2, 1, 16, 64, 0, 7),      # padded tail, MQA
+    (2, 33, 6, 3, 130, 32, 17, 5),    # multi-m-block + window + GQA 2
+    (1, 8, 2, 2, 8, 16, 0, 0),        # tiny single-block grid
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunk_attention_matches_chunk_attend(B, C, Hq, Hkv, M, D,
+                                              window, n_pad, dtype):
+    """Flash chunk-attention kernel vs the materialized [B,Hq,C,M+C]
+    reference: attention output AND the probs_cache eviction signal."""
+    from repro.models.blocks import _chunk_attend
+
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    q = rand(k1, (B, C, Hq, D), dtype)
+    kc = rand(k2, (B, C, Hkv, D), dtype)
+    vc = rand(k3, (B, C, Hkv, D), dtype)
+    cache = _random_cache(B, Hkv, M, D, k4)
+    cache = {**cache, "k": cache["k"].astype(dtype),
+             "v": cache["v"].astype(dtype)}
+    t0 = 300
+    chunk_pos = jnp.where(jnp.arange(C) < C - n_pad,
+                          t0 + jnp.arange(C), -1).astype(jnp.int32)
+    out_x, pc_x = _chunk_attend(q, kc, vc, cache, chunk_pos, window)
+    out_p, pc_p = ops.chunk_attention(q, kc, vc, cache, chunk_pos,
+                                      window=window, impl="pallas")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out_p, np.float32),
+                               np.asarray(out_x, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(pc_p), np.asarray(pc_x),
+                               atol=tol, rtol=tol)
+    if n_pad:
+        # padded queries: zero output, zero probs on both impls
+        np.testing.assert_array_equal(
+            np.asarray(pc_p[:, :, C - n_pad:], np.float32), 0.0)
+        np.testing.assert_array_equal(
+            np.asarray(out_p[:, C - n_pad:], np.float32), 0.0)
+
+
+def test_chunk_attention_need_probs_false_same_out():
+    """needs_attn=False policies skip the probs outputs entirely; the
+    attention output must be unchanged and probs_cache None."""
+    from repro.models.blocks import _chunk_attend
+
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    B, C, Hq, Hkv, M, D = 2, 16, 4, 2, 24, 32
+    q = rand(k1, (B, C, Hq, D))
+    kc = rand(k2, (B, C, Hkv, D))
+    vc = rand(k3, (B, C, Hkv, D))
+    cache = _random_cache(B, Hkv, M, D, k4, seed=5)
+    chunk_pos = (300 + jnp.arange(C)).astype(jnp.int32)
+    out_ref, _ = _chunk_attend(q, kc, vc, cache, chunk_pos, 0)
+    out, pc = ops.chunk_attention(q, kc, vc, cache, chunk_pos,
+                                  need_probs=False, impl="pallas")
+    assert pc is None
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunk_attention_probs_normalized():
+    """probs_cache + (implicit) chunk mass = 1 for valid queries: check
+    the cache share never exceeds 1 and matches the reference split."""
+    from repro.models.blocks import _chunk_attend
+
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    B, C, Hq, Hkv, M, D = 1, 12, 2, 2, 16, 32
+    q = rand(k1, (B, C, Hq, D))
+    kc = rand(k2, (B, C, Hkv, D))
+    vc = rand(k3, (B, C, Hkv, D))
+    cache = _random_cache(B, Hkv, M, D, k4, seed=3)
+    chunk_pos = (300 + jnp.arange(C)).astype(jnp.int32)
+    _, pc = ops.chunk_attention(q, kc, vc, cache, chunk_pos,
+                                impl="pallas")
+    mass = np.asarray(pc).sum(-1)
+    assert (mass <= 1.0 + 1e-5).all()
+    assert (mass >= 0.0).all()

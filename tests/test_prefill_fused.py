@@ -1,0 +1,195 @@
+"""Fused chunked-prefill pipeline tests (the PR-2 serving hot path).
+
+Claims under test (docs/serving.md §Chunked prefill):
+  1. T.prefill_chunk_loop (one lax.scan over padded chunks) matches the
+     eager per-chunk loop — same last hidden AND the same eviction
+     victims — for all four chunked-prefill policies, on both the XLA
+     einsum path and the Pallas flash chunk-attention kernel.
+  2. Engine.generate(chunked=True) is O(1) dispatches: one fused
+     prefill scan + one fused decode scan = 2, independent of the
+     number of chunks; the eager reference pays one per chunk.
+  3. The padding scheme is exact: a tail chunk padded to the full chunk
+     width (masked positions) produces the same state and hidden as a
+     narrow chunk holding only the real tokens.
+  4. attn_impl="pallas" chunked prefill picks identical eviction
+     victims to XLA and token-identical generations.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ServeConfig, get_smoke_config
+from repro.models import transformer as T
+from repro.serve.engine import build_engine
+
+CHUNK_POLICIES = ["trimkv", "h2o", "snapkv", "streaming_llm"]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(
+        get_smoke_config("trimkv-paper-4b"), num_layers=2, d_model=64,
+        d_ff=128, num_heads=4, num_kv_heads=2, vocab_size=64,
+        gate_bias_init=3.0)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    gates = T.init_gate_params(jax.random.PRNGKey(1), cfg)
+    # 43 = 5*8 + 3: a remainder so every test exercises the padded tail
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 43), 0,
+                                cfg.vocab_size)
+    return cfg, params, gates, tokens
+
+
+def _int_leaves(state):
+    return [np.asarray(x) for x in jax.tree.leaves(state)
+            if np.asarray(x).dtype == np.int32]
+
+
+# -------------------------------------------- fused vs eager chunk loop
+
+
+@pytest.mark.parametrize("policy", CHUNK_POLICIES)
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_fused_prefill_matches_eager(tiny, policy, impl):
+    """One-scan chunked prefill == per-chunk eager loop: same last
+    hidden, same surviving cache slots (eviction victims)."""
+    cfg, params, gates, tokens = tiny
+    eng = build_engine(cfg, params, gates, budget=16, policy=policy,
+                       prefill_chunk=8, attn_impl=impl)
+    s_fused, h_fused = eng.prefill(tokens, chunked=True, fused=True)
+    s_eager, h_eager = eng.prefill(tokens, chunked=True, fused=False)
+    np.testing.assert_allclose(np.asarray(h_fused, np.float32),
+                               np.asarray(h_eager, np.float32),
+                               atol=1e-5, rtol=1e-5)
+    pos_f, pos_e = _int_leaves(s_fused), _int_leaves(s_eager)
+    assert len(pos_f) == len(pos_e) and len(pos_f) > 0
+    for a, b in zip(pos_f, pos_e):
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------ dispatch count
+
+
+def test_chunked_generate_is_o1_dispatches(tiny):
+    """Fused chunked generate = prefill scan + decode scan = 2
+    dispatches, independent of chunk count; eager pays one per chunk."""
+    cfg, params, gates, tokens = tiny
+    eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                       prefill_chunk=8)
+    for max_new in (4, 12):
+        eng.dispatch_count = 0
+        eng.generate(tokens, max_new, chunked=True)
+        assert eng.dispatch_count == 2, eng.dispatch_count
+    eng.dispatch_count = 0
+    eng.prefill(tokens, chunked=True, fused=False)
+    assert eng.dispatch_count == 6, eng.dispatch_count  # ceil(43/8)
+
+
+def test_eager_chunked_prefill_single_closure_shape(tiny):
+    """The padded remainder means the eager loop compiles ONE chunk
+    closure even when T % C != 0 (the pre-PR behavior traced two)."""
+    cfg, params, gates, tokens = tiny
+    eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                       prefill_chunk=8)
+    eng.prefill(tokens, chunked=True, fused=False)       # 5 full + tail
+    n_compiles = eng._prefill_chunk._cache_size()
+    assert n_compiles == 1, n_compiles
+
+
+# ----------------------------------------------------- padded remainder
+
+
+@pytest.mark.parametrize("policy", ["trimkv", "h2o"])
+def test_padded_tail_matches_narrow_tail(tiny, policy):
+    """A tail chunk padded to width C with masked positions must equal
+    the same tokens run as a narrow width-rem chunk: identical state
+    (cache contents AND eviction choices) and identical last hidden."""
+    cfg, params, gates, tokens = tiny
+    serve = ServeConfig(budget=16, policy=policy, prefill_chunk=8)
+    eng = build_engine(cfg, params, gates, budget=16, policy=policy,
+                       prefill_chunk=8)
+    state, _ = T.prefill_chunk(params, gates, cfg, tokens[:, :8],
+                               eng.fresh_state(2), eng.policy, serve)
+    rem = tokens[:, 8:11]                                 # 3 real tokens
+    s_narrow, h_narrow = T.prefill_chunk(
+        params, gates, cfg, rem, jax.tree.map(jnp.copy, state),
+        eng.policy, serve)
+    padded = jnp.pad(rem, ((0, 0), (0, 5)))
+    s_pad, h_pad = T.prefill_chunk(params, gates, cfg, padded, state,
+                                   eng.policy, serve,
+                                   n_valid=jnp.int32(3))
+    np.testing.assert_allclose(np.asarray(h_narrow, np.float32),
+                               np.asarray(h_pad, np.float32),
+                               atol=1e-5, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s_narrow), jax.tree.leaves(s_pad)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "falcon-mamba-7b"])
+def test_padded_tail_matches_narrow_tail_families(arch):
+    """The recurrent/SSM chunk paths mask padded steps to the identity
+    recurrence and dynamic-slice their conv tails at the last real
+    token — the padded tail must reproduce the narrow-tail state (h AND
+    conv history) exactly for hybrid and mamba families too."""
+    cfg = get_smoke_config(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    gates = T.init_gate_params(jax.random.PRNGKey(1), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 11), 0,
+                                cfg.vocab_size)
+    serve = ServeConfig(budget=16, policy="trimkv", prefill_chunk=8)
+    eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                       prefill_chunk=8)
+    state, _ = T.prefill_chunk(params, gates, cfg, tokens[:, :8],
+                               eng.fresh_state(2), eng.policy, serve)
+    rem = tokens[:, 8:]                                   # 3 real tokens
+    s_narrow, h_narrow = T.prefill_chunk(
+        params, gates, cfg, rem, jax.tree.map(jnp.copy, state),
+        eng.policy, serve)
+    padded = jnp.pad(rem, ((0, 0), (0, 5)))
+    s_pad, h_pad = T.prefill_chunk(params, gates, cfg, padded, state,
+                                   eng.policy, serve,
+                                   n_valid=jnp.int32(3))
+    np.testing.assert_allclose(np.asarray(h_narrow, np.float32),
+                               np.asarray(h_pad, np.float32),
+                               atol=1e-5, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s_narrow), jax.tree.leaves(s_pad)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------- pallas vs xla parity
+
+
+@pytest.mark.parametrize("policy", CHUNK_POLICIES)
+def test_pallas_chunked_prefill_same_victims_as_xla(tiny, policy):
+    """The flash chunk-attention kernel must reproduce the XLA path's
+    eviction decisions exactly for every policy (its probs_cache feeds
+    H2O/SnapKV scoring)."""
+    cfg, params, gates, tokens = tiny
+    states, hs = {}, {}
+    for impl in ("xla", "pallas"):
+        eng = build_engine(cfg, params, gates, budget=16, policy=policy,
+                           prefill_chunk=8, attn_impl=impl)
+        states[impl], hs[impl] = eng.prefill(tokens, chunked=True)
+    np.testing.assert_allclose(np.asarray(hs["xla"], np.float32),
+                               np.asarray(hs["pallas"], np.float32),
+                               atol=3e-2, rtol=3e-2)
+    pos_x, pos_p = _int_leaves(states["xla"]), _int_leaves(states["pallas"])
+    assert len(pos_x) == len(pos_p) and len(pos_x) > 0
+    for a, b in zip(pos_x, pos_p):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pallas_chunked_generate_token_identical(tiny):
+    cfg, params, gates, tokens = tiny
+    out = {}
+    for impl in ("xla", "pallas"):
+        eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                           prefill_chunk=8, attn_impl=impl)
+        out[impl] = eng.generate(tokens, 8, chunked=True)["ids"]
+    np.testing.assert_array_equal(out["xla"], out["pallas"])
