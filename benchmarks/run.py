@@ -10,7 +10,8 @@ import traceback
 
 from benchmarks import (fig3_pareto, fig5_interpretability, roofline,
                         table1_longproc, table3_longmem, table5_ablation,
-                        table6_throughput, table9_chunked_prefill)
+                        table6_throughput, table7_serving,
+                        table9_chunked_prefill)
 
 BENCHES = (
     ("fig3_pareto", fig3_pareto.run),
@@ -18,6 +19,7 @@ BENCHES = (
     ("table3_longmem", table3_longmem.run),
     ("table5_ablation", table5_ablation.run),
     ("table6_throughput", table6_throughput.run),
+    ("table7_serving", table7_serving.run),
     ("table9_chunked_prefill", table9_chunked_prefill.run),
     ("fig5_interpretability", fig5_interpretability.run),
     ("roofline", roofline.run),

@@ -150,6 +150,17 @@ class ServeConfig:
     # whole chunk loop — under one lax.scan dispatch each (O(1) host
     # round-trips) instead of one dispatch per token / per chunk.
     fused: bool = True
+    # --- continuous batching (serve.scheduler, docs/serving.md) ---
+    # decode_segment: steps per fused scheduler segment — the scheduler
+    # re-examines lanes (retire / refill) only at segment boundaries, so
+    # dispatches are O(prefills + segments), never O(tokens).
+    decode_segment: int = 16
+    # eos_id: default per-request stop token (-1 = never stop early);
+    # Request.eos_id overrides per request.
+    eos_id: int = -1
+    # max_queue: Scheduler.submit rejects (returns False) beyond this
+    # many waiting requests — the admission-control backpressure knob.
+    max_queue: int = 64
 
 
 @dataclasses.dataclass(frozen=True)

@@ -29,17 +29,49 @@ def init_cache(batch: int, n_kv_heads: int, budget: int, head_dim: int,
     }
 
 
-def cache_len(cache) -> jnp.ndarray:
-    """Number of filled slots, [B, Hkv]."""
-    return jnp.sum((cache["pos"] >= 0).astype(jnp.int32), axis=-1)
+def lane_t(t):
+    """Normalize a position argument — scalar (lock-step batch) or [B]
+    (per-lane, continuous batching) — to broadcast against [B, Hkv, M]
+    slot tensors. Every consumer of `t` in this module and in
+    core.policies routes through this, so the lane-based scheduler can
+    hand each lane its own clock."""
+    t = jnp.asarray(t, jnp.int32)
+    return t[:, None, None] if t.ndim == 1 else t
+
+
+def cache_len(cache, *, per_lane: bool = False) -> jnp.ndarray:
+    """Number of filled slots, [B, Hkv] — or, with per_lane=True, the
+    per-lane occupancy [B] (max over kv heads: heads evict divergently,
+    so the lane's memory footprint is its fullest head)."""
+    filled = jnp.sum((cache["pos"] >= 0).astype(jnp.int32), axis=-1)
+    return jnp.max(filled, axis=-1) if per_lane else filled
+
+
+def reset_lanes(cache, lane_mask):
+    """Clear the masked lanes' slots without touching the others:
+    pos := -1, beta := 1, aux := 0. K/V bytes are left in place — with
+    pos < 0 a slot is invisible to every attention read and scores -inf
+    in every eviction formula, so in the slot-dense layout retiring a
+    request is O(M) metadata writes, not a paged-block-table walk.
+    lane_mask: [B] bool. Vectorized: one call resets any subset.
+    The full-state reset (transformer.reset_lanes, _LANE_RESET) applies
+    these same fills across the whole pytree — a parity test in
+    tests/test_scheduler.py keeps the two in sync."""
+    m = lane_mask[:, None, None]
+    new = dict(cache)
+    new["pos"] = jnp.where(m, jnp.int32(-1), cache["pos"])
+    new["beta"] = jnp.where(m, 1.0, cache["beta"])
+    new["aux"] = jnp.where(m, 0.0, cache["aux"])
+    return new
 
 
 def cache_insert(cache, k_t, v_t, beta_t, t, keep_scores_fn,
                  incoming_score=None, incoming_aux=None):
     """Insert one token; evict the lowest-keep-score entry if full.
 
-    k_t, v_t: [B, Hkv, Dh] (k post-RoPE); beta_t: [B, Hkv]; t: scalar
-    position of the incoming token. keep_scores_fn(cache, t) ->
+    k_t, v_t: [B, Hkv, Dh] (k post-RoPE); beta_t: [B, Hkv]; t: position
+    of the incoming token — scalar, or [B] when lanes run on their own
+    clocks (continuous batching). keep_scores_fn(cache, t) ->
     [B, Hkv, M] keep scores (higher = keep; empty slots must be -inf).
 
     Faithful to Alg. 1: the incoming token participates in the argmin.
@@ -80,7 +112,7 @@ def cache_insert(cache, k_t, v_t, beta_t, t, keep_scores_fn,
                          cache["v"])
     new["beta"] = jnp.where(mask, beta_t[..., None].astype(jnp.float32),
                             cache["beta"])
-    new["pos"] = jnp.where(mask, jnp.int32(t), cache["pos"])
+    new["pos"] = jnp.where(mask, lane_t(t), cache["pos"])
     aux_in = (jnp.zeros_like(cache["aux"][..., :1]) if incoming_aux is None
               else incoming_aux[..., None].astype(jnp.float32))
     new["aux"] = jnp.where(mask, aux_in, cache["aux"])
@@ -140,7 +172,7 @@ def decode_attend(q_t, cache, *, sm_scale=None, window: int = 0, t=None,
     group = Hq // Hkv
     ok = cache["pos"] >= 0                                   # [B,Hkv,M]
     if window > 0 and t is not None:
-        ok = ok & ((t - cache["pos"]) < window)
+        ok = ok & ((lane_t(t) - cache["pos"]) < window)
     scale = sm_scale if sm_scale is not None else 1.0 / jnp.sqrt(Dh)
     qg = q_t.reshape(B, Hkv, group, Dh).astype(cache["k"].dtype)
     s = jnp.einsum("bhgd,bhmd->bhgm", qg, cache["k"],

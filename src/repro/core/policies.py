@@ -3,10 +3,16 @@
 Every policy exposes:
   keep_scores(cache, t) -> [B, Hkv, M]  higher = keep; empty slots -inf.
   chunk_scores(...)     -> keep scores for freshly-prefilled chunk tokens.
-  decode_update(cache, probs) -> cache  (accumulate attention aux).
+  decode_update(cache, probs, active=None) -> cache  (accumulate
+  attention aux; `active` [B] masks retired/empty lanes so their aux
+  stays frozen under continuous batching).
   needs_attn: whether the engine must hand decode attention probs to
   decode_update (TRIM-KV / StreamingLLM don't -> cheaper decode path;
   H2O / R-KV / SnapKV do — this asymmetry is the paper's Table 6 claim).
+
+`t` may be a scalar (lock-step batch) or a [B] per-lane clock
+(continuous batching: each lane is at its own position) — every score
+formula broadcasts it via cache.lane_t.
 
 Baselines implemented per the papers cited in TRIM-KV Sec 5:
   StreamingLLM (Xiao+23): sinks + recency.
@@ -22,6 +28,8 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.cache import lane_t
 
 NEG_INF = -1e30  # local copy; avoids core<->models circular import
 
@@ -61,8 +69,20 @@ class Policy:
         pseudo = {"pos": pos_c, "beta": beta_c, "aux": aux_c, "k": k_c}
         return self.keep_scores(pseudo, t)
 
-    def decode_update(self, cache, probs_kv):
+    def decode_update(self, cache, probs_kv, active=None):
         return cache
+
+
+def _lane_probs(probs_kv, active):
+    """Zero the attention-aux contribution of inactive lanes so a
+    retired/empty lane's accumulated mass stays frozen. This is the
+    POLICY-level guarantee: the block layer additionally freezes the
+    whole inactive-lane state wholesale (blocks._select_rows), but
+    decode_update must stand alone for callers that drive policies
+    without that machinery."""
+    if active is None:
+        return probs_kv
+    return jnp.where(active[:, None, None], probs_kv, 0.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,7 +91,7 @@ class TrimKV(Policy):
     name: str = "trimkv"
 
     def keep_scores(self, cache, t):
-        dist = (t - cache["pos"]).astype(jnp.float32)
+        dist = (lane_t(t) - cache["pos"]).astype(jnp.float32)
         logb = jnp.log(jnp.maximum(cache["beta"], 1e-30))
         return _mask_empty(jnp.exp(dist * logb), cache["pos"])
 
@@ -96,13 +116,13 @@ class H2O(Policy):
     def keep_scores(self, cache, t):
         pos = cache["pos"]
         s = cache["aux"]
-        recent = (t - pos) < self.recent_window
+        recent = (lane_t(t) - pos) < self.recent_window
         s = jnp.where(recent, BIG, s)
         return _mask_empty(s, pos)
 
-    def decode_update(self, cache, probs_kv):
+    def decode_update(self, cache, probs_kv, active=None):
         new = dict(cache)
-        new["aux"] = cache["aux"] + probs_kv
+        new["aux"] = cache["aux"] + _lane_probs(probs_kv, active)
         return new
 
 
@@ -115,7 +135,7 @@ class SnapKV(Policy):
 
     def keep_scores(self, cache, t):
         pos = cache["pos"]
-        recent = (t - pos) < self.recent_window
+        recent = (lane_t(t) - pos) < self.recent_window
         s = jnp.where(recent, BIG + pos.astype(jnp.float32), cache["aux"])
         return _mask_empty(s, pos)
 
@@ -133,7 +153,7 @@ class RKV(Policy):
             hi = jnp.max(jnp.where(pos >= 0, x, -BIG), axis=-1, keepdims=True)
             return (x - lo) / jnp.maximum(hi - lo, 1e-6)
         s = self.rkv_lambda * norm01(imp) + (1 - self.rkv_lambda) * norm01(div)
-        recent = (t - pos) < self.recent_window
+        recent = (lane_t(t) - pos) < self.recent_window
         s = jnp.where(recent, BIG, s)
         return _mask_empty(s, pos)
 
@@ -141,9 +161,9 @@ class RKV(Policy):
         div = _key_diversity(cache["k"], cache["pos"])
         return self._combine(cache["aux"], div, cache["pos"], t)
 
-    def decode_update(self, cache, probs_kv):
+    def decode_update(self, cache, probs_kv, active=None):
         new = dict(cache)
-        new["aux"] = cache["aux"] + probs_kv
+        new["aux"] = cache["aux"] + _lane_probs(probs_kv, active)
         return new
 
 
@@ -155,7 +175,7 @@ class KeyDiff(Policy):
     def keep_scores(self, cache, t):
         pos = cache["pos"]
         div = _key_diversity(cache["k"], pos)
-        recent = (t - pos) < self.recent_window
+        recent = (lane_t(t) - pos) < self.recent_window
         return _mask_empty(jnp.where(recent, BIG, div), pos)
 
 

@@ -120,7 +120,10 @@ def chunk_attention_pallas(q, k_c, v_c, cache_k, cache_v, cache_pos,
                            interpret=True):
     """q: [B,C,Hq,D]; k_c,v_c: [B,C,Hkv,D] (the chunk's keys/values);
     cache_k/cache_v: [B,Hkv,M,D]; cache_pos: [B,Hkv,M] int32 (-1 empty);
-    chunk_pos: [C] int32 absolute chunk positions (-1 = padded tail).
+    chunk_pos: [C] or [B,C] int32 absolute chunk positions (-1 = padded
+    tail). The per-batch form carries ragged prompts: each request in a
+    mixed-length admission batch marks its own tail padding, so ONE
+    kernel call serves a whole continuous-batching prefill grid.
 
     Returns (out [B,C,Hq,D] in q dtype,
              probs_cache [B,Hkv,C,M] f32 — normalized chunk-query
@@ -160,11 +163,12 @@ def chunk_attention_pallas(q, k_c, v_c, cache_k, cache_v, cache_pos,
         kh = jnp.pad(kh, ((0, 0), (0, pc), (0, 0)))
         vh = jnp.pad(vh, ((0, 0), (0, pc), (0, 0)))
     # chunk positions enter twice: per-q-block (query positions) and
-    # per-c-block (chunk-key positions) — padded with -1 on both axes
-    qp_q = jnp.pad(chunk_pos.astype(jnp.int32)[None], ((0, 0), (0, pq)),
-                   constant_values=-1)
-    qp_c = jnp.pad(chunk_pos.astype(jnp.int32)[None], ((0, 0), (0, pc)),
-                   constant_values=-1)
+    # per-c-block (chunk-key positions) — padded with -1 on both axes,
+    # one row per batch element (ragged prompts mark per-request tails)
+    cp2 = jnp.broadcast_to(jnp.atleast_2d(chunk_pos.astype(jnp.int32)),
+                           (B, C))
+    qp_q = jnp.pad(cp2, ((0, 0), (0, pq)), constant_values=-1)
+    qp_c = jnp.pad(cp2, ((0, 0), (0, pc)), constant_values=-1)
     Cq, Mp = n_q * q_block, n_m * m_block
 
     kernel = functools.partial(_chunk_kernel, sm_scale=1.0 / np.sqrt(D),
@@ -210,8 +214,9 @@ def chunk_attention_pallas(q, k_c, v_c, cache_k, cache_v, cache_pos,
                          lambda bh, qi, ki: (bh // group, chunk_i(ki), 0)),
             pl.BlockSpec((1, c_block, D),
                          lambda bh, qi, ki: (bh // group, chunk_i(ki), 0)),
-            pl.BlockSpec((1, c_block), lambda bh, qi, ki: (0, chunk_i(ki))),
-            pl.BlockSpec((1, q_block), lambda bh, qi, ki: (0, qi)),
+            pl.BlockSpec((1, c_block),
+                         lambda bh, qi, ki: (bh // Hq, chunk_i(ki))),
+            pl.BlockSpec((1, q_block), lambda bh, qi, ki: (bh // Hq, qi)),
         ],
         out_specs=out_specs,
         out_shape=out_shape,

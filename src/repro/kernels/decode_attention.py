@@ -38,7 +38,7 @@ NEG_INF = -1e30
 
 
 def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, kn_ref, vn_ref, t_ref,
-                   o_ref, *rest, m_block, n_m, window, M, has_new,
+                   o_ref, *rest, m_block, n_m, window, M, hq, has_new,
                    want_probs):
     if want_probs:
         praw_ref, mblk_ref, mfin_ref, lfin_ref, pn_ref = rest[:5]
@@ -57,7 +57,9 @@ def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, kn_ref, vn_ref, t_ref,
     k = k_ref[0].astype(jnp.float32)                        # [bm, D]
     v = v_ref[0].astype(jnp.float32)
     pos = pos_ref[0]                                        # [bm] int32
-    t = t_ref[0]
+    # per-lane clock: t is [B] in SMEM (continuous batching runs each
+    # lane at its own position); grid dim 0 walks B*Hq rows
+    t = t_ref[pl.program_id(0) // hq]
     scale = 1.0 / np.sqrt(q.shape[-1])
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -111,7 +113,8 @@ def decode_attention_pallas(q_t, k_cache, v_cache, pos, t, *, window=0,
                             m_block=512, interpret=True, new_kv=None,
                             return_probs=False):
     """q_t: [B,Hq,D]; k_cache/v_cache: [B,Hkv,M,D]; pos: [B,Hkv,M] int32
-    (-1 empty); t: scalar current position.
+    (-1 empty); t: current position — scalar, or [B] when each lane runs
+    on its own clock (continuous batching).
 
     new_kv: optional (k_t, v_t) [B,Hkv,D] — the in-flight token, merged
     into the online softmax as a provisional entry at position t
@@ -145,11 +148,11 @@ def decode_attention_pallas(q_t, k_cache, v_cache, pos, t, *, window=0,
         kh = jnp.pad(kh, ((0, 0), (0, pad), (0, 0)))
         vh = jnp.pad(vh, ((0, 0), (0, pad), (0, 0)))
         ph = jnp.pad(ph, ((0, 0), (0, pad)), constant_values=-1)
-    t_arr = jnp.full((1,), t, jnp.int32)
+    t_arr = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
     Mp = n_m * m_block
 
     kernel = functools.partial(_decode_kernel, m_block=m_block, n_m=n_m,
-                               window=window, M=M, has_new=has_new,
+                               window=window, M=M, hq=Hq, has_new=has_new,
                                want_probs=return_probs)
     out_specs = [pl.BlockSpec((1, 1, D), lambda bh, mi: (bh, 0, 0))]
     out_shape = [jax.ShapeDtypeStruct((B * Hq, 1, D), q_t.dtype)]

@@ -52,7 +52,8 @@ def chunk_attention(q, k_c, v_c, cache, chunk_pos, *, window=0,
                     need_probs=True, impl="auto"):
     """Chunk-query attention over (bounded cache ∪ chunk) for chunked
     prefill. q: [B,C,Hq,D]; k_c,v_c: [B,C,Hkv,D]; cache: the slot cache
-    dict (k/v/pos used); chunk_pos: [C] int32, -1 = padded tail.
+    dict (k/v/pos used); chunk_pos: [C] or [B,C] int32, -1 = padded tail
+    (the per-batch form marks each ragged request's own tail).
     Returns (out [B,C,Hq,D], probs_cache [B,Hkv,C,M] — None when the
     pallas impl is told need_probs=False: the kernel then skips the
     probs outputs entirely (needs_attn=False policies discard them)."""

@@ -66,6 +66,10 @@ def decode_attention_ref(q_t, k_cache, v_cache, pos, t, *, window=0,
     B, Hq, D = q_t.shape
     Hkv, M = k_cache.shape[1], k_cache.shape[2]
     group = Hq // Hkv
+    # t may be scalar or [B] (per-lane clocks, continuous batching)
+    t3 = jnp.asarray(t, jnp.int32)
+    if t3.ndim == 1:
+        t3 = t3[:, None, None]
     if new_kv is not None:
         k_new, v_new = new_kv
         k_cache = jnp.concatenate(
@@ -73,13 +77,12 @@ def decode_attention_ref(q_t, k_cache, v_cache, pos, t, *, window=0,
         v_cache = jnp.concatenate(
             [v_cache, v_new[:, :, None].astype(v_cache.dtype)], axis=2)
         pos = jnp.concatenate(
-            [pos, jnp.broadcast_to(jnp.asarray(t, jnp.int32),
-                                   (B, Hkv, 1))], axis=2)
+            [pos, jnp.broadcast_to(t3, (B, Hkv, 1))], axis=2)
     k = jnp.repeat(k_cache, group, axis=1).astype(jnp.float32)
     v = jnp.repeat(v_cache, group, axis=1).astype(jnp.float32)
     ok = pos >= 0
     if window > 0:
-        ok = ok & ((t - pos) < window)
+        ok = ok & ((t3 - pos) < window)
     valid = jnp.repeat(ok, group, axis=1)
     s = jnp.einsum("bhd,bhmd->bhm", q_t.astype(jnp.float32), k) / np.sqrt(D)
     s = jnp.where(valid, s, NEG_INF)

@@ -484,16 +484,32 @@ def _mamba_train(p, cfg, x):
 # ======================================================= block: decode
 
 
+def _select_rows(mask, new, old):
+    """Per-lane (batch-axis-0) select over a block-state pytree: lanes
+    where mask is False keep their old state BIT-identically — the
+    mechanism that freezes retired/empty lanes under continuous
+    batching (a where on the carried state, not a scatter)."""
+    def sel(n, o):
+        m = mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, new, old)
+
+
 def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy,
-                       attn_impl="xla"):
-    """x_t: [B, d]; t: scalar int32 absolute position. Returns
+                       attn_impl="xla", active=None):
+    """x_t: [B, d]; t: absolute position — scalar int32, or [B] when
+    each lane runs on its own clock (continuous batching). Returns
     (x_out [B,d], new_state, probs_or_None). attn_impl: "xla" (grouped
     einsum over the slot cache) or "pallas" (flash-decode kernel;
-    interpret mode off-TPU)."""
+    interpret mode off-TPU). active: optional [B] bool — lanes marked
+    False are masked to the identity: their caches, recurrences and
+    policy aux come back bit-identical (retired/empty scheduler
+    lanes)."""
     if kind in ("global", "local", "cross"):
         cache = state["cache"] if kind == "cross" else state
         normed = rmsnorm_apply(p["norm1"], x_t, cfg.norm_eps)
-        pos = jnp.broadcast_to(t, (x_t.shape[0], 1))
+        pos = jnp.broadcast_to(jnp.asarray(t, jnp.int32),
+                               (x_t.shape[0],))[:, None]
         q, k, v = _qkv(p["attn"], cfg, normed[:, None], pos)
         q_t, k_t, v_t = q[:, 0], k[:, 0], v[:, 0]              # [B,H,D]
         if g is not None and cfg.trimkv:
@@ -515,7 +531,8 @@ def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy,
         else:
             out, probs, p_new = decode_attend(q_t, cache, window=window,
                                               t=t, new_kv=(k_t, v_t))
-        cache = policy.decode_update(cache, _probs_to_kv(probs, cfg))
+        cache = policy.decode_update(cache, _probs_to_kv(probs, cfg),
+                                     active=active)
         inc = 1.0 if policy.name == "trimkv" else None
         aux_new = (_probs_to_kv(p_new[..., None], cfg)[..., 0]
                    if policy.needs_attn else None)
@@ -534,6 +551,8 @@ def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy,
         ffn_out, _ = _ffn_apply(p["ffn"], normed2[:, None], cfg)
         new_state = ({"cache": cache, "xk": state["xk"], "xv": state["xv"]}
                      if kind == "cross" else cache)
+        if active is not None:
+            new_state = _select_rows(active, new_state, state)
         return x + ffn_out[:, 0], new_state, probs
     if kind == "recurrent":
         normed = rmsnorm_apply(p["norm1"], x_t, cfg.norm_eps)
@@ -549,9 +568,14 @@ def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy,
         x = x_t + dense_apply(p["out"], (h.astype(x_t.dtype) * gate))
         normed2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
         ffn_out, _ = _ffn_apply(p["ffn"], normed2[:, None], cfg)
-        return x + ffn_out[:, 0], {"h": h, "conv": conv_state}, None
+        new_state = {"h": h, "conv": conv_state}
+        if active is not None:
+            new_state = _select_rows(active, new_state, state)
+        return x + ffn_out[:, 0], new_state, None
     if kind == "mamba":
         out, new_state = _mamba_step(p, cfg, x_t, state)
+        if active is not None:
+            new_state = _select_rows(active, new_state, state)
         return x_t + out, new_state, None
     raise ValueError(kind)
 
@@ -719,16 +743,18 @@ def _chunk_attend(q, k_c, v_c, cache, chunk_pos, window):
     Sec B.3 chunked-prefill setting); the single-shot prefill and
     dry-run use chunked_attention instead.
 
-    q: [B,C,Hq,D]; k_c,v_c: [B,C,Hkv,D]; chunk_pos: [C] int32 absolute
-    positions of the chunk tokens, -1 marking padded tail positions
-    (padded queries get zero output / zero probs; padded keys are never
-    attended). Returns (out [B,C,Hq,D], probs_cache [B,Hkv,C,M] —
-    per-chunk-query attention over the cache region, for H2O-style
-    accumulation)."""
+    q: [B,C,Hq,D]; k_c,v_c: [B,C,Hkv,D]; chunk_pos: [C] or [B,C] int32
+    absolute positions of the chunk tokens, -1 marking padded tail
+    positions (padded queries get zero output / zero probs; padded keys
+    are never attended; the [B,C] form lets every ragged request in a
+    mixed-length admission batch mark its own tail). Returns
+    (out [B,C,Hq,D], probs_cache [B,Hkv,C,M] — per-chunk-query attention
+    over the cache region, for H2O-style accumulation)."""
     B, C, Hq, D = q.shape
     Hkv = k_c.shape[2]
     M = cache["pos"].shape[-1]
     group = Hq // Hkv
+    cp2 = jnp.broadcast_to(jnp.atleast_2d(chunk_pos), (B, C))
     keys = jnp.concatenate(
         [cache["k"].astype(jnp.float32),
          jnp.moveaxis(k_c, 1, 2).astype(jnp.float32)], axis=2)  # [B,Hkv,M+C,D]
@@ -737,13 +763,13 @@ def _chunk_attend(q, k_c, v_c, cache, chunk_pos, window):
          jnp.moveaxis(v_c, 1, 2).astype(jnp.float32)], axis=2)
     pos = jnp.concatenate(
         [cache["pos"],
-         jnp.broadcast_to(chunk_pos[None, None], (B, Hkv, C))], axis=2)
+         jnp.broadcast_to(cp2[:, None], (B, Hkv, C))], axis=2)
     keys_r = jnp.repeat(keys, group, axis=1)
     vals_r = jnp.repeat(vals, group, axis=1)
     pos_r = jnp.repeat(pos, group, axis=1)                   # [B,Hq,M+C]
     s = jnp.einsum("bchd,bhnd->bhcn", q.astype(jnp.float32), keys_r)
     s = s / np.sqrt(D)
-    qpos = chunk_pos[None, None, :, None]
+    qpos = cp2[:, None, :, None]
     dist = qpos - pos_r[:, :, None, :]
     mask = (pos_r[:, :, None, :] >= 0) & (dist >= 0)
     if window > 0:
@@ -760,27 +786,35 @@ def apply_block_prefill_chunk(p, g, cfg, kind, x, state, t0, *, policy,
                               obs_window=32, memory=None, n_valid=None,
                               attn_impl="xla"):
     """Continue prefill with chunk x [B,C,d] given existing state.
-    t0: absolute position of the chunk's first token.
+    t0: absolute position of the chunk's first token — scalar, or [B]
+    when lanes run on their own clocks (ragged continuous-batching
+    admission: every request's chunk starts at its own position).
 
-    n_valid: number of real tokens in the chunk (None = all C). The
-    tail positions beyond n_valid are PADDING: they carry position -1,
-    are masked out of attention, contribute zero policy aux, and can
-    never win a cache slot — so one closure shape serves any prompt
-    length. attn_impl "pallas" routes the chunk attention through the
-    flash kernel (kernels.chunk_attention; interpret off-TPU)."""
+    n_valid: number of real tokens in the chunk — None (= all C), a
+    scalar (uniform batch), or a [B] vector (ragged prompts: each
+    request marks its own tail). Tail positions beyond n_valid are
+    PADDING: they carry position -1, are masked out of attention,
+    contribute zero policy aux, and can never win a cache slot — so one
+    closure shape serves any mix of prompt lengths. Rows whose n_valid
+    is 0 (a request already fully prefilled inside a longer grid) are
+    frozen bit-identically: their caches, recurrences and clocks come
+    back untouched. attn_impl "pallas" routes the chunk attention
+    through the flash kernel (kernels.chunk_attention; interpret
+    off-TPU)."""
     B, C, _ = x.shape
+    ragged = n_valid is not None and jnp.ndim(n_valid) == 1
+    row_ok = (n_valid > 0) if ragged else None
     if kind in ("global", "local", "cross"):
         cache = state["cache"] if kind == "cross" else state
         normed = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
         idx = jnp.arange(C)
-        positions = t0 + jnp.broadcast_to(idx[None], (B, C))
-        if n_valid is None:
-            chunk_pos = (t0 + idx).astype(jnp.int32)
-            t_end = t0 + C - 1
-        else:
-            chunk_pos = jnp.where(idx < n_valid, t0 + idx, -1).astype(
-                jnp.int32)
-            t_end = t0 + n_valid - 1
+        t0b = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (B,))
+        positions = t0b[:, None] + idx[None, :]
+        nvb = (jnp.full((B,), C, jnp.int32) if n_valid is None else
+               jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (B,)))
+        chunk_pos = jnp.where(idx[None, :] < nvb[:, None], positions,
+                              -1).astype(jnp.int32)           # [B,C]
+        t_end = t0b + nvb - 1                                 # [B]
         q, k, v = _qkv(p["attn"], cfg, normed, positions)
         window = cfg.window if kind == "local" else 0
         if attn_impl == "pallas":
@@ -802,16 +836,15 @@ def apply_block_prefill_chunk(p, g, cfg, kind, x, state, t0, *, policy,
         aux_c = jnp.zeros((B, cfg.num_kv_heads, C), jnp.float32)
         if policy.needs_attn:
             W = min(obs_window, C)
-            nv = C if n_valid is None else n_valid
-            aux_c = _obs_probs_chunk(q, k, chunk_pos, nv, t_end - W + 1,
-                                     window, W)
+            aux_c = _obs_probs_chunk_lanes(q, k, chunk_pos, nvb,
+                                           t_end - W + 1, window, W)
             # accumulate chunk-query attention mass into cache aux (H2O);
             # padded queries were zeroed in the attend, so they add none
             cache = dict(cache)
             cache["aux"] = cache["aux"] + probs_cache.sum(axis=2)
         k_c = jnp.moveaxis(k, 1, 2)
         v_c = jnp.moveaxis(v, 1, 2)
-        pos_c = jnp.broadcast_to(chunk_pos[None, None],
+        pos_c = jnp.broadcast_to(chunk_pos[:, None],
                                  (B, cfg.num_kv_heads, C))
         chunk_scores = policy.chunk_scores(pos_c=pos_c, beta_c=beta_c,
                                            aux_c=aux_c, k_c=k_c, t=t_end)
@@ -829,6 +862,11 @@ def apply_block_prefill_chunk(p, g, cfg, kind, x, state, t0, *, policy,
                          "xv": state["xv"]}
         normed2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
         ffn_out, _ = _ffn_apply(p["ffn"], normed2, cfg)
+        if row_ok is not None:
+            # rows with an empty chunk (already fully prefilled inside a
+            # longer ragged grid) keep their state bit-identically — the
+            # top-M merge above may reorder their slots otherwise
+            new_state = _select_rows(row_ok, new_state, state)
         return x + ffn_out, new_state, None
     if kind == "recurrent":
         # continue the recurrence: conv sees [conv_state, chunk]
@@ -844,8 +882,9 @@ def apply_block_prefill_chunk(p, g, cfg, kind, x, state, t0, *, policy,
         bx = i * xb.astype(jnp.float32)
         if n_valid is not None:
             # padded steps become the identity recurrence (a=1, input 0)
-            # so the carried h after C steps IS h at the last real token
-            valid = (jnp.arange(C) < n_valid)[None, :, None]
+            # so the carried h after C steps IS h at the last real token;
+            # per-lane n_valid masks each ragged request's own tail
+            valid = _valid_steps(n_valid, B, C)[..., None]
             a_log = jnp.where(valid, a_log, 0.0)
             bx = jnp.where(valid, bx, 0.0)
         h_seq = _rg_lru_scan(a_log, bx, state["h"])
@@ -854,10 +893,14 @@ def apply_block_prefill_chunk(p, g, cfg, kind, x, state, t0, *, policy,
         ffn_out, _ = _ffn_apply(p["ffn"], normed2, cfg)
         new_state = {"h": h_seq[:, -1],
                      "conv": _conv_tail_chunk(ext, cfg.conv_width, n_valid)}
+        if row_ok is not None:
+            new_state = _select_rows(row_ok, new_state, state)
         return x + ffn_out, new_state, None
     if kind == "mamba":
         out, new_state = _mamba_prefill_chunk(p, cfg, x, state,
                                               n_valid=n_valid)
+        if row_ok is not None:
+            new_state = _select_rows(row_ok, new_state, state)
         return x + out, new_state, None
     raise ValueError(kind)
 
@@ -868,14 +911,24 @@ def _conv_with_history(ext, w, b, W, C):
     return out + b
 
 
+def _valid_steps(n_valid, B, C):
+    """[B, C] bool: step j of row b is a real token (j < n_valid_b).
+    n_valid may be a scalar (uniform batch) or [B] (ragged)."""
+    nvb = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (B,))
+    return jnp.arange(C)[None, :] < nvb[:, None]
+
+
 def _conv_tail_chunk(ext, W, n_valid):
     """Conv state after a (possibly padded) chunk: the W-1 pre-conv
     inputs ending at the last REAL token. ext: [B, (W-1)+C, ch]; real
-    inputs occupy ext[:, W-1 : W-1+n_valid]."""
+    inputs occupy ext[:, W-1 : W-1+n_valid]. n_valid scalar or [B]
+    (ragged: each row slices at its own tail)."""
     if n_valid is None:
         return ext[:, -(W - 1):]
     B, _, ch = ext.shape
-    return jax.lax.dynamic_slice(ext, (0, n_valid, 0), (B, W - 1, ch))
+    nvb = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32), (B,))
+    return jax.vmap(
+        lambda e, s: jax.lax.dynamic_slice(e, (s, 0), (W - 1, ch)))(ext, nvb)
 
 
 def _mamba_prefill_chunk(p, cfg, x, state, n_valid=None):
@@ -897,7 +950,7 @@ def _mamba_prefill_chunk(p, cfg, x, state, n_valid=None):
         Bm[:, :, None, :].astype(jnp.float32)
     if n_valid is not None:
         # padded steps: h = 1*h + 0 so h_last is h at the last real token
-        valid = (jnp.arange(C) < n_valid)[None, :, None, None]
+        valid = _valid_steps(n_valid, B, C)[..., None, None]
         dA = jnp.where(valid, dA, 1.0)
         dBx = jnp.where(valid, dBx, 0.0)
 
@@ -947,6 +1000,18 @@ def _obs_probs_chunk(q, k, chunk_pos, n_valid, obs_start, window, W):
     n_obs = jnp.maximum(jnp.sum(obs.astype(jnp.float32)), 1.0)
     probs = jnp.sum(probs * obs[None, None, :, None], axis=2) / n_obs
     return probs.reshape(B, Hkv, group, C).mean(axis=2)        # [B,Hkv,C]
+
+
+def _obs_probs_chunk_lanes(q, k, chunk_pos, n_valid, obs_start, window, W):
+    """Per-lane _obs_probs_chunk: under ragged continuous batching each
+    request has its own tail (chunk_pos row), valid count and obs-window
+    placement, so the static-shape obs slice is vmapped over the batch.
+    q: [B,C,Hq,D]; k: [B,C,Hkv,D]; chunk_pos: [B,C]; n_valid/obs_start:
+    [B] -> [B,Hkv,C]."""
+    def one(qb, kb, cp, nv, start):
+        return _obs_probs_chunk(qb[None], kb[None], cp, nv, start,
+                                window, W)[0]
+    return jax.vmap(one)(q, k, chunk_pos, n_valid, obs_start)
 
 
 def _obs_probs(q_obs, k, positions, obs_start, window):

@@ -208,13 +208,17 @@ def compute_logits(params, cfg, hidden):
 
 
 def init_decode_state(cfg, batch: int, budget: int):
+    """Decode state pytree. `t` is a PER-LANE [batch] clock: under
+    continuous batching every lane (request slot) runs at its own
+    position; the lock-step engine paths simply keep all entries
+    equal."""
     dtype = to_dtype(cfg.dtype)
     unit, U, R, tail = _unit_and_counts(cfg)
 
     def one(kind):
         return blocks.init_block_state(cfg, kind, batch, budget, dtype)
 
-    state = {"t": jnp.zeros((), jnp.int32)}
+    state = {"t": jnp.zeros((batch,), jnp.int32)}
     if R > 0:
         unit_state = tuple(one(k) for k in unit)
         state["layers"] = jax.tree.map(
@@ -248,7 +252,7 @@ def prefill(params, gate_params, cfg, tokens, state, policy, serve_cfg, *,
             new_states.append(ns)
         return h, tuple(new_states)
 
-    new_state = {"t": jnp.asarray(T, jnp.int32)}
+    new_state = {"t": jnp.full((tokens.shape[0],), T, jnp.int32)}
     if R > 0:
         glayers = (gate_params or {}).get("layers")
         h, stacked = jax.lax.scan(
@@ -274,9 +278,13 @@ def _prefill_chunk_step(params, gate_params, cfg, tokens, state, policy,
                         serve_cfg, memory, n_valid=None):
     """One chunk of the chunked-prefill pipeline: embed -> per-layer
     chunk attention + top-M eviction merge -> final norm. tokens: [B,C];
-    n_valid: real-token count (None = all C; the padded tail positions
-    are masked everywhere — see blocks.apply_block_prefill_chunk).
-    Returns (new_state, h_last [B,d] — the LAST REAL token's hidden)."""
+    n_valid: real-token count — None (= all C), scalar, or [B] for a
+    ragged batch where each request marks its own tail (the padded tail
+    positions are masked everywhere; rows with n_valid 0 are frozen
+    bit-identically — see blocks.apply_block_prefill_chunk).
+    Returns (new_state, h_last [B,d] — each row's LAST REAL token's
+    hidden; rows with an empty chunk return garbage there, callers
+    carry the previous value — see prefill_chunk_loop)."""
     unit, U, R, tail = _unit_and_counts(cfg)
     h = jnp.take(params["embed"], tokens, axis=0)
     t0 = state["t"]
@@ -328,6 +336,10 @@ def _prefill_chunk_step(params, gate_params, cfg, tokens, state, policy,
     h = rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
     if n_valid is None:
         h_last = h[:, -1]
+    elif jnp.ndim(n_valid) == 1:
+        # ragged: each row reads its own last real token
+        ix = jnp.clip(n_valid - 1, 0, C - 1).astype(jnp.int32)
+        h_last = jnp.take_along_axis(h, ix[:, None, None], axis=1)[:, 0]
     else:
         h_last = jax.lax.dynamic_index_in_dim(h, nv - 1, axis=1,
                                               keepdims=False)
@@ -356,22 +368,31 @@ def prefill_chunk_loop(params, gate_params, cfg, chunks, n_valid, state,
     dispatches like the fused decode loop, instead of one per chunk.
 
     chunks: [n_chunks, B, C] (prompt reshaped, tail padded to C);
-    n_valid: [n_chunks] int32 real-token counts (== C except the tail).
-    All chunks share one closure shape, so any prompt length T compiles
-    exactly once per n_chunks. Returns (state, h_last [B,d] of the last
-    real token). Token-exact vs the eager per-chunk loop: both run
+    n_valid: [n_chunks] int32 real-token counts (== C except the tail),
+    OR [n_chunks, B] for a RAGGED batch — mixed-length prompts packed
+    into one shared chunk grid, each request marking its own per-chunk
+    valid counts (full chunks, then its tail, then zeros once it is
+    fully prefilled; zero-chunks freeze that row bit-identically).
+    All chunks share one closure shape, so any prompt-length mix
+    compiles exactly once per n_chunks. Returns (state, h_last [B,d] of
+    each row's last real token — the ragged loop carries every row's
+    h_last across its trailing empty chunks). Token-exact vs the eager
+    per-chunk loop AND vs per-request unpadded prefill: all run
     _prefill_chunk_step on identical padded inputs."""
     extra_inputs = extra_inputs or {}
     memory = _memory_from_inputs(params, cfg, extra_inputs)
     B = chunks.shape[1]
     dtype = params["embed"].dtype
+    ragged = n_valid.ndim == 2
 
     def body(carry, xs):
-        state, _ = carry
+        state, h_prev = carry
         tokens, nv = xs
         state, h_last = _prefill_chunk_step(params, gate_params, cfg,
                                             tokens, state, policy,
                                             serve_cfg, memory, n_valid=nv)
+        if ragged:
+            h_last = jnp.where((nv > 0)[:, None], h_last, h_prev)
         return (state, h_last), None
 
     h0 = jnp.zeros((B, cfg.d_model), dtype)
@@ -381,8 +402,13 @@ def prefill_chunk_loop(params, gate_params, cfg, chunks, n_valid, state,
 
 
 def decode_step(params, gate_params, cfg, state, token, policy,
-                attn_impl="xla"):
-    """token: [B] int32. Returns (new_state, logits [B, Vp] f32)."""
+                attn_impl="xla", active=None):
+    """token: [B] int32. Returns (new_state, logits [B, Vp] f32).
+    state["t"] is the per-lane clock [B] (lock-step paths keep all
+    entries equal). active: optional [B] bool — inactive lanes are
+    masked to the identity end-to-end: their caches, recurrences and
+    clocks come back bit-identical (the continuous-batching scheduler
+    freezes retired/empty lanes this way)."""
     unit, U, R, tail = _unit_and_counts(cfg)
     x = jnp.take(params["embed"], token, axis=0)           # [B,d]
     t = state["t"]
@@ -394,11 +420,12 @@ def decode_step(params, gate_params, cfg, state, token, policy,
             g = ug[i] if ug is not None else None
             x, ns, _ = blocks.apply_block_decode(
                 up[i], g, cfg, kind, x, st[i], t, policy=policy,
-                attn_impl=attn_impl)
+                attn_impl=attn_impl, active=active)
             new_states.append(ns)
         return x, tuple(new_states)
 
-    new_state = {"t": t + 1}
+    new_state = {"t": t + 1 if active is None
+                 else t + active.astype(jnp.int32)}
     if R > 0:
         glayers = (gate_params or {}).get("layers")
         x, stacked = jax.lax.scan(
@@ -412,7 +439,7 @@ def decode_step(params, gate_params, cfg, state, token, policy,
         g = (gate_params or {}).get("tail", (None,) * len(tail))[i]
         x, ns, _ = blocks.apply_block_decode(
             params["tail"][i], g, cfg, kind, x, state["tail"][i], t,
-            policy=policy, attn_impl=attn_impl)
+            policy=policy, attn_impl=attn_impl, active=active)
         new_tail.append(ns)
     new_state["tail"] = tuple(new_tail)
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
@@ -460,6 +487,137 @@ def decode_loop(params, gate_params, cfg, state, first_token, n_steps,
     (state, _, _), toks = jax.lax.scan(
         body, (state, first_token, rng), None, length=n_steps)
     return state, jnp.moveaxis(toks, 0, 1)                 # [B, n_steps]
+
+
+# --------------------------------------------- continuous-batching lanes
+#
+# The serving scheduler (serve.scheduler) treats the batch dim as B
+# fixed LANES: each lane holds one in-flight request at its own
+# position, finished lanes are reset (pos := -1 — slot-dense eviction
+# needs no paged block tables) and refilled from the queue. The helpers
+# below are the transformer-level surface of that model: masked decode
+# segments, per-lane RNG sampling, and lane-granular state surgery.
+
+
+def sample_token_lanes(logits, keys, *, greedy, temperature):
+    """Per-lane sampling with INDEPENDENT key chains. keys: [B,2]
+    uint32 (one PRNG key per lane, seeded from its request). Each lane
+    splits its own key once per step and draws from its own logits row,
+    which is bit-identical to the stream a B=1 Engine.generate seeded
+    with that lane's key would draw — so scheduler outputs reproduce
+    one-shot generation regardless of which lane (or admission order) a
+    request landed on. Returns (tokens [B] int32, new_keys [B,2])."""
+    if greedy or temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
+    split = jax.vmap(jax.random.split)(keys)               # [B,2,2]
+    new_keys, sub = split[:, 0], split[:, 1]
+    tok = jax.vmap(lambda k, l: jax.random.categorical(k, l / temperature)
+                   )(sub, logits)
+    return tok.astype(jnp.int32), new_keys
+
+
+def decode_segment_loop(params, gate_params, cfg, state, tok, keys, active,
+                        n_emitted, max_new, eos_id, n_steps, policy, *,
+                        greedy=True, temperature=0.0, attn_impl="xla"):
+    """Masked continuous-batching decode segment: n_steps of the fused
+    sample -> embed -> layers -> evict -> logits cycle under ONE
+    lax.scan, over B independent lanes that may be mid-request, finished
+    or empty. The scheduler calls this once per segment, so dispatches
+    stay O(segments) — never O(tokens) — while lanes retire and refill
+    between calls.
+
+    Per-lane carries: tok [B] (next token to emit/feed), keys [B,2]
+    (independent RNG chains — see sample_token_lanes), active [B] bool,
+    n_emitted [B] int32. Per-lane limits: max_new [B] int32, eos_id [B]
+    int32 (-1 = never stop early). Each step a lane EMITS its carried
+    token, feeds it through the masked decode_step (inactive lanes are
+    frozen bit-identically), then samples the next; emitting its
+    eos_id or its max_new-th token deactivates it at the step boundary
+    (early-exit-safe: the step that emits the final token still updates
+    the lane's state, exactly like the one-shot loop it must match).
+
+    Returns (state, tok, keys, active, n_emitted,
+             ids [B, n_steps] int32, emitted [B, n_steps] bool) —
+    ids[l, j] is valid output for lane l iff emitted[l, j]."""
+    def body(carry, _):
+        state, tok, keys, active, n_emitted = carry
+        # each step emits the PRE-step carry token (mirroring
+        # decode_loop, which emits first_token before feeding it)
+        emit = active
+        state, logits = decode_step(params, gate_params, cfg, state, tok,
+                                    policy, attn_impl=attn_impl,
+                                    active=active)
+        nxt, keys = sample_token_lanes(logits, keys, greedy=greedy,
+                                       temperature=temperature)
+        n_emitted = n_emitted + emit.astype(jnp.int32)
+        done = emit & (((eos_id >= 0) & (tok == eos_id)) |
+                       (n_emitted >= max_new))
+        new_tok = jnp.where(emit, nxt, tok)
+        return (state, new_tok, keys, active & ~done, n_emitted), \
+            (tok, emit)
+
+    (state, tok, keys, active, n_emitted), (toks, emits) = jax.lax.scan(
+        body, (state, tok, keys, active, n_emitted), None,
+        length=n_steps)
+    return (state, tok, keys, active, n_emitted,
+            jnp.moveaxis(toks, 0, 1), jnp.moveaxis(emits, 0, 1))
+
+
+# reset targets per leaf name: slot metadata is invalidated (pos -1
+# makes a slot invisible everywhere), recurrences and clocks zero; K/V
+# and cross-memory bytes are left in place — unreadable once pos < 0,
+# and fully overwritten by the next insert_lanes anyway. The cache
+# fills must match core.cache.reset_lanes (the per-cache primitive;
+# parity asserted in tests/test_scheduler.py).
+_LANE_RESET = {"pos": -1, "beta": 1.0, "aux": 0.0, "h": 0.0, "conv": 0.0}
+
+
+def reset_lanes(state, lane_mask):
+    """Retire lanes: clear the masked lanes' cache metadata (pos := -1,
+    beta := 1, aux := 0), recurrent/SSM state and clock WITHOUT touching
+    any other lane — in the slot-dense layout a lane reset is O(M)
+    metadata writes, no paged block tables to walk. lane_mask: [B]
+    bool. Neighbor lanes come back bit-identical (asserted by
+    tests/test_scheduler.py)."""
+    def reset(axis):
+        def f(path, leaf):
+            name = next((p.key for p in reversed(path)
+                         if isinstance(p, jax.tree_util.DictKey)), None)
+            if name not in _LANE_RESET:
+                return leaf
+            shape = [1] * leaf.ndim
+            shape[axis] = lane_mask.shape[0]
+            fill = jnp.full_like(leaf, _LANE_RESET[name])
+            return jnp.where(lane_mask.reshape(shape), fill, leaf)
+        return f
+
+    out = {"t": jnp.where(lane_mask, 0, state["t"])}
+    if state["layers"] is not None:
+        out["layers"] = jax.tree_util.tree_map_with_path(
+            reset(1), state["layers"])
+    else:
+        out["layers"] = None
+    out["tail"] = jax.tree_util.tree_map_with_path(reset(0), state["tail"])
+    return out
+
+
+def insert_lanes(state, sub_state, lanes):
+    """Admit requests: scatter a freshly prefilled sub_state (batch k,
+    e.g. from a ragged prefill_chunk_loop over the admitted prompts)
+    into lanes `lanes` ([k] int32) of the B-lane state. Every leaf of
+    the target lanes is overwritten (cache K/V included), so insert
+    after reset_lanes is a complete lane lifecycle."""
+    lanes = jnp.asarray(lanes, jnp.int32)
+    out = {"t": state["t"].at[lanes].set(sub_state["t"])}
+    if state["layers"] is not None:
+        out["layers"] = jax.tree.map(
+            lambda o, n: o.at[:, lanes].set(n), state["layers"],
+            sub_state["layers"])
+    else:
+        out["layers"] = None
+    out["tail"] = jax.tree.map(lambda o, n: o.at[lanes].set(n),
+                               state["tail"], sub_state["tail"])
+    return out
 
 
 def teacher_force_loop(params, gate_params, cfg, state, tokens, policy,

@@ -1,3 +1,6 @@
 from repro.serve.engine import Engine, build_engine
+from repro.serve.request import Request, RequestState, Status
+from repro.serve.scheduler import Scheduler
 
-__all__ = ["Engine", "build_engine"]
+__all__ = ["Engine", "build_engine", "Request", "RequestState", "Status",
+           "Scheduler"]

@@ -29,7 +29,11 @@ Decode-path architecture (docs/serving.md):
 
 `dispatch_count` counts host->device program launches issued by this
 engine (incremented once per jitted-closure call) — the O(1)-dispatch
-claim is asserted on it by tests/test_decode_fused.py.
+claim is asserted on it by tests/test_decode_fused.py. The
+continuous-batching scheduler (serve.scheduler) builds on this engine:
+its jitted lane closures live here (`lane_closures`, cached per engine
+so successive schedulers share compilations) and its launches are
+counted on the same `dispatch_count`.
 """
 from __future__ import annotations
 
@@ -100,6 +104,49 @@ class Engine:
         self._decode_loop = jax.jit(_decode_loop, static_argnums=(3, 4),
                                     donate_argnums=(0,))
         self._tf_loop = jax.jit(_tf_loop, donate_argnums=(0,))
+        self._lane_closures = {}
+
+    def lane_closures(self, greedy: bool):
+        """Jitted continuous-batching closures (serve.scheduler), built
+        lazily and CACHED PER ENGINE so every Scheduler constructed on
+        this engine shares one set of compilations: ragged admission
+        prefill(+first token), lane scatter, masked decode segment, lane
+        reset. Keyed by the greedy flag (the segment closure bakes the
+        sampling mode in)."""
+        greedy = bool(greedy)
+        if greedy in self._lane_closures:
+            return self._lane_closures[greedy]
+        params, gates, cfg = self.params, self.gates, self.cfg
+        serve, policy, impl = self.serve, self.policy, self.serve.attn_impl
+
+        def _admit(state, tok, keys, chunks, n_valid, new_keys, lanes):
+            # the WHOLE admission is one program: fresh sub-state +
+            # ragged prefill + first tokens + lane scatter — one
+            # dispatch per admission round however many requests and
+            # chunks it packs
+            k = chunks.shape[1]
+            sub = T.init_decode_state(cfg, k, serve.budget)
+            sub, h_last = T.prefill_chunk_loop(
+                params, gates, cfg, chunks, n_valid, sub, policy, serve)
+            logits = T.compute_logits(params, cfg, h_last)
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            state = T.insert_lanes(state, sub, lanes)
+            return (state, tok.at[lanes].set(first),
+                    keys.at[lanes].set(new_keys))
+
+        def _segment(state, tok, keys, active, n_emitted, max_new, eos):
+            return T.decode_segment_loop(
+                params, gates, cfg, state, tok, keys, active, n_emitted,
+                max_new, eos, serve.decode_segment, policy, greedy=greedy,
+                temperature=serve.temperature, attn_impl=impl)
+
+        closures = {
+            "admit": jax.jit(_admit, donate_argnums=(0,)),
+            "segment": jax.jit(_segment, donate_argnums=(0,)),
+            "reset": jax.jit(T.reset_lanes, donate_argnums=(0,)),
+        }
+        self._lane_closures[greedy] = closures
+        return closures
 
     def _first_token(self, h_last):
         """Greedy token from the prefill's last hidden state [B,d]."""
@@ -122,13 +169,18 @@ class Engine:
         chunk — remainder included — shares ONE closure shape. With
         fused (default: serve_cfg.fused) the whole per-chunk pipeline
         runs under one lax.scan dispatch (T.prefill_chunk_loop);
-        fused=False keeps the eager one-dispatch-per-chunk reference."""
+        fused=False keeps the eager one-dispatch-per-chunk reference.
+        chunked=True ALWAYS runs the per-chunk compression pipeline,
+        even for prompts within one chunk — it is the parity oracle for
+        the continuous-batching scheduler, whose ragged admission grid
+        runs every prompt (short ones included) through the chunk
+        path."""
         tokens = jnp.asarray(tokens)
         B, Tn = tokens.shape
         state = self.fresh_state(B)
         extra = extra_inputs or {}
         C = self.serve.prefill_chunk
-        if not chunked or Tn <= C:
+        if not chunked:
             self.dispatch_count += 1
             return self._prefill(tokens, state, extra)
         fused = self.serve.fused if fused is None else fused

@@ -1,0 +1,79 @@
+"""Request model for the continuous-batching scheduler.
+
+A `Request` is one user generation: a ragged prompt (any length), its
+own decode budget (`max_new`), its own RNG seed (temperature sampling
+reproduces the request's one-shot stream regardless of which lane or
+admission order it lands on — see transformer.sample_token_lanes) and
+an optional stop token. `RequestState` is the scheduler-side
+bookkeeping: queue -> lane -> done lifecycle, emitted tokens, and the
+timestamps the serving benchmarks turn into latency/goodput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+import numpy as np
+
+
+class Status(enum.Enum):
+    QUEUED = "queued"        # accepted, waiting for a free lane
+    RUNNING = "running"      # occupying a lane (prefilled, decoding)
+    DONE = "done"            # retired on EOS or max_new
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request. prompt: int32 token ids, any length >= 1
+    (prompts are RAGGED — the scheduler packs mixed lengths into one
+    padded chunk grid). eos_id -1 = never stop early. arrival: optional
+    stream-mode arrival offset in seconds (Poisson traces)."""
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    seed: int = 0
+    eos_id: int = -1
+    arrival: float = 0.0
+
+    def __post_init__(self):
+        prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new < 1:
+            raise ValueError(f"request {self.rid}: max_new must be >= 1")
+        object.__setattr__(self, "prompt", prompt)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Scheduler-side lifecycle of one request."""
+    request: Request
+    status: Status = Status.QUEUED
+    lane: int = -1                      # -1 while queued / after retire
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    submit_sec: float = 0.0             # when the scheduler accepted it
+    admit_sec: Optional[float] = None   # when it won a lane (prefill)
+    finish_sec: Optional[float] = None  # when it retired
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def done(self) -> bool:
+        return self.status is Status.DONE
+
+    @property
+    def ids(self) -> np.ndarray:
+        return np.asarray(self.tokens, np.int32)
+
+    @property
+    def latency_sec(self) -> Optional[float]:
+        if self.finish_sec is None:
+            return None
+        return self.finish_sec - self.submit_sec

@@ -1,0 +1,250 @@
+"""Lane-based continuous batching over the fused serving loops.
+
+The `Scheduler` owns B fixed LANES (the batch dim of one shared decode
+state). Each lane holds at most one in-flight request; the scheduler
+
+  1. ADMITS queued requests into free lanes: their ragged prompts are
+     packed into ONE padded chunk grid (per-request n_valid column in
+     the [n_chunks, k] valid matrix) and prefilled by a single
+     T.prefill_chunk_loop dispatch, then scattered into the free lanes
+     with T.insert_lanes;
+  2. runs bounded fused DECODE SEGMENTS (T.decode_segment_loop:
+     serve_cfg.decode_segment steps under one lax.scan, per-lane active
+     masks / clocks / RNG chains / max_new / eos);
+  3. RETIRES lanes whose request emitted its eos_id or max_new-th token
+     at the segment boundary (T.reset_lanes — in the slot-dense layout
+     a lane reset is pos := -1, no paged block tables) and immediately
+     refills them from the queue.
+
+Dispatch accounting: every device program this scheduler launches bumps
+the owning Engine's `dispatch_count`, and the total is
+O(prefill rounds + segments) — NEVER O(tokens) or O(requests)
+(tests/test_scheduler.py asserts the exact formula under churn).
+
+Correctness contract: each request's output is token-identical to a
+one-shot `Engine.generate(prompt[None], max_new, chunked=True,
+seed=seed)` (truncated at its eos), for every eviction policy and both
+attention impls — lanes are frozen bit-identically while inactive, each
+lane's RNG chain is seeded from its request alone, and the ragged
+prefill is bit-identical to per-request prefill.
+
+`continuous=False` degrades the SAME machinery to static batching
+(admission waits until every lane is free, finished lanes idle until
+the whole wave drains) — the baseline the serving benchmark
+(benchmarks/table7_serving.py) compares goodput against.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Dict, Iterable, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import Engine
+from repro.serve.request import Request, RequestState, Status
+
+
+def _prng_keys(seeds) -> np.ndarray:
+    """[k,2] uint32 threefry keys, one per request seed — the same
+    layout jax.random.PRNGKey produces ([seed >> 32, seed & 0xffffffff];
+    asserted in tests), built host-side so admission costs no extra
+    device dispatches. Each lane's chain therefore reproduces a B=1
+    Engine.generate(seed=seed) stream exactly."""
+    arr = np.empty((len(seeds), 2), np.uint32)
+    for i, s in enumerate(seeds):
+        arr[i, 0] = (int(s) >> 32) & 0xFFFFFFFF
+        arr[i, 1] = int(s) & 0xFFFFFFFF
+    return arr
+
+
+class Scheduler:
+    def __init__(self, engine: Engine, n_lanes: int, *, greedy: bool = True,
+                 continuous: bool = True):
+        if engine.cfg.family in ("vlm", "encdec"):
+            raise ValueError(
+                "continuous batching does not yet plumb per-request "
+                "cross-attention memory; serve these families through "
+                "the one-shot Engine")
+        self.eng = engine
+        self.cfg, self.serve = engine.cfg, engine.serve
+        self.policy = engine.policy
+        self.n_lanes = n_lanes
+        self.continuous = continuous
+        self.greedy = greedy or self.serve.temperature == 0.0
+        # jitted closures live on the Engine (cached per greedy flag) so
+        # successive schedulers — e.g. benchmark warm-up then measured
+        # run — share one set of compilations
+        closures = engine.lane_closures(self.greedy)
+        self._admit_fn = closures["admit"]
+        self._segment = closures["segment"]
+        self._reset = closures["reset"]
+
+        # device lane state
+        self.state = engine.fresh_state(n_lanes)
+        self.tok = jnp.zeros((n_lanes,), jnp.int32)
+        self.keys = jnp.zeros((n_lanes, 2), jnp.uint32)
+        # host lane bookkeeping (tiny [B] arrays, re-uploaded per call)
+        self.active = np.zeros(n_lanes, bool)
+        self.n_emitted = np.zeros(n_lanes, np.int32)
+        self.max_new = np.ones(n_lanes, np.int32)
+        self.eos = np.full(n_lanes, -1, np.int32)
+        self.lane_req: List[Optional[RequestState]] = [None] * n_lanes
+        self.queue: collections.deque = collections.deque()
+        self.results: Dict[int, RequestState] = {}
+        # dispatch accounting (engine.dispatch_count gets every launch):
+        # total launches == n_prefill_rounds + n_segments + n_resets —
+        # O(prefills + segments), asserted by tests/test_scheduler.py
+        self.n_prefill_rounds = 0
+        self.n_segments = 0
+        self.n_resets = 0
+        self._t0 = time.monotonic()
+
+    # ---------------------------------------------------------- queueing
+
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def submit(self, request: Request) -> bool:
+        """Accept a request into the waiting queue. Returns False (the
+        request is REJECTED) when serve_cfg.max_queue requests are
+        already waiting — the admission-control backpressure."""
+        if len(self.queue) >= self.serve.max_queue:
+            return False
+        rs = RequestState(request=request, submit_sec=self._now())
+        self.queue.append(rs)
+        self.results[request.rid] = rs
+        return True
+
+    @property
+    def n_running(self) -> int:
+        return sum(rs is not None for rs in self.lane_req)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and self.n_running == 0
+
+    # --------------------------------------------------------- admission
+
+    def _pack_prompts(self, batch: List[RequestState]):
+        """Pack ragged prompts into one padded chunk grid:
+        chunks [n_chunks, B, C] + per-request valid matrix
+        [n_chunks, B] (full chunks, then each request's tail, then
+        zeros — zero-chunks freeze that row, see prefill_chunk_loop).
+        The batch dim is ALWAYS padded to n_lanes with all-zero-valid
+        rows (frozen end-to-end, then dropped at the scatter), so the
+        admission closure compiles once per n_chunks — never per
+        admission size k, which varies freely under churn."""
+        C = self.serve.prefill_chunk
+        lens = np.zeros(self.n_lanes, np.int64)
+        lens[: len(batch)] = [rs.request.prompt_len for rs in batch]
+        n_chunks = max(1, int(-(-lens.max() // C)))
+        grid = np.zeros((self.n_lanes, n_chunks * C), np.int32)
+        for i, rs in enumerate(batch):
+            grid[i, : lens[i]] = rs.request.prompt
+        n_valid = np.clip(lens[None, :] - np.arange(n_chunks)[:, None] * C,
+                          0, C).astype(np.int32)
+        chunks = np.moveaxis(grid.reshape(self.n_lanes, n_chunks, C), 1, 0)
+        return jnp.asarray(chunks), jnp.asarray(n_valid)
+
+    def _admit(self) -> int:
+        """Fill free lanes from the queue: the whole admission batch —
+        ragged prefill, first tokens, lane scatter — is ONE dispatch
+        however many requests it packs."""
+        free = [l for l in range(self.n_lanes) if self.lane_req[l] is None]
+        if not self.continuous and len(free) < self.n_lanes:
+            return 0          # static batching: wait for the full drain
+        k = min(len(free), len(self.queue))
+        if k == 0:
+            return 0
+        batch = [self.queue.popleft() for _ in range(k)]
+        lanes = free[:k]
+        chunks, n_valid = self._pack_prompts(batch)
+        # pad rows scatter to index n_lanes: OUT OF BOUNDS, so jax
+        # drops them (the default scatter mode) — no lane is touched
+        lane_idx = np.full(self.n_lanes, self.n_lanes, np.int32)
+        lane_idx[:k] = lanes
+        seeds = [rs.request.seed for rs in batch] + [0] * (self.n_lanes - k)
+        self.eng.dispatch_count += 1
+        self.n_prefill_rounds += 1
+        self.state, self.tok, self.keys = self._admit_fn(
+            self.state, self.tok, self.keys, chunks, n_valid,
+            jnp.asarray(_prng_keys(seeds)), jnp.asarray(lane_idx))
+        now = self._now()
+        for rs, lane in zip(batch, lanes):
+            rs.status, rs.lane, rs.admit_sec = Status.RUNNING, lane, now
+            self.lane_req[lane] = rs
+            self.active[lane] = True
+            self.n_emitted[lane] = 0
+            self.max_new[lane] = rs.request.max_new
+            self.eos[lane] = rs.request.eos_id
+        return k
+
+    # ---------------------------------------------------------- decoding
+
+    def _run_segment(self) -> List[RequestState]:
+        """One fused decode segment over all lanes; harvest emissions,
+        retire lanes that finished inside the segment."""
+        self.eng.dispatch_count += 1
+        self.n_segments += 1
+        (self.state, self.tok, self.keys, active_d, n_emitted_d, ids,
+         emitted) = self._segment(
+            self.state, self.tok, self.keys, jnp.asarray(self.active),
+            jnp.asarray(self.n_emitted), jnp.asarray(self.max_new),
+            jnp.asarray(self.eos))
+        ids, emitted = np.asarray(ids), np.asarray(emitted)
+        # np.array (copy): asarray views of device buffers are read-only
+        self.active = np.array(active_d)
+        self.n_emitted = np.array(n_emitted_d)
+        finished, retired_lanes, now = [], [], self._now()
+        for lane in range(self.n_lanes):
+            rs = self.lane_req[lane]
+            if rs is None:
+                continue
+            rs.tokens.extend(int(x) for x in ids[lane][emitted[lane]])
+            if not self.active[lane]:
+                rs.status, rs.finish_sec, rs.lane = Status.DONE, now, -1
+                self.lane_req[lane] = None
+                finished.append(rs)
+                retired_lanes.append(lane)
+        if retired_lanes:
+            # one vectorized reset for every lane retired this segment
+            mask = np.zeros(self.n_lanes, bool)
+            mask[retired_lanes] = True
+            self.eng.dispatch_count += 1
+            self.n_resets += 1
+            self.state = self._reset(self.state, jnp.asarray(mask))
+        return finished
+
+    # --------------------------------------------------------- top level
+
+    def step(self) -> List[RequestState]:
+        """One scheduling round: admit into free lanes, then run one
+        decode segment. Returns the requests that finished."""
+        self._admit()
+        if self.active.any():
+            return self._run_segment()
+        return []
+
+    def run(self, requests: Iterable[Request] = (),
+            respect_arrivals: bool = False) -> Dict[int, RequestState]:
+        """Drain: serve every given (plus already queued) request to
+        completion and return {rid: RequestState}. With
+        respect_arrivals, each request is submitted once wall-clock
+        reaches its `arrival` offset (fast-forwarding when the engine
+        goes idle, so a sparse Poisson trace never sleeps)."""
+        pending = collections.deque(
+            sorted(requests, key=lambda r: r.arrival))
+        while pending or self.queue or self.n_running:
+            # submit due arrivals; a max_queue rejection leaves the
+            # request at the head of `pending` to retry once the queue
+            # drains (nothing is silently dropped)
+            now = self._now()
+            while pending and (not respect_arrivals or
+                               pending[0].arrival <= now or self.idle):
+                if not self.submit(pending[0]):
+                    break
+                pending.popleft()
+            self.step()
+        return self.results

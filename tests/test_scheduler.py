@@ -1,0 +1,284 @@
+"""Continuous-batching scheduler tests (the PR-3 serving subsystem).
+
+Claims under test (docs/serving.md §Continuous batching):
+  1. Scheduler outputs are token-identical to one-shot
+     Engine.generate(prompt[None], chunked=True) PER REQUEST — ragged
+     prompt lengths, per-request max_new, B < N lanes — for every
+     eviction policy, on both attention impls, greedy and temperature.
+  2. Lane lifecycle is surgically clean: resetting a lane leaves every
+     neighbor lane's cache bit-identical; inactive lanes are frozen
+     bit-identically through decode segments.
+  3. The ragged admission prefill (mixed-length prompts packed into one
+     padded chunk grid with per-request n_valid columns) is
+     bit-identical to prefilling each request alone.
+  4. Per-request RNG: temperature streams depend only on the request's
+     seed — not on lane placement, admission order, or neighbors.
+  5. Dispatches scale with segments (and prefill rounds), never with
+     tokens or requests: the exact counter formula holds under churn.
+  6. EOS retires a lane early, truncating exactly at the stop token.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.serve import Request, Scheduler, Status, build_engine
+
+ALL_POLICIES = ["trimkv", "streaming_llm", "h2o", "snapkv", "rkv",
+                "keydiff", "full"]
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(
+        get_smoke_config("trimkv-paper-4b"), num_layers=2, d_model=64,
+        d_ff=128, num_heads=4, num_kv_heads=2, vocab_size=64,
+        gate_bias_init=3.0)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    gates = T.init_gate_params(jax.random.PRNGKey(1), cfg)
+    return cfg, params, gates
+
+
+def _requests(lens, max_new, seed0=0):
+    rng = np.random.RandomState(7)
+    return [Request(rid=i, prompt=rng.randint(0, 64, size=L).astype(np.int32),
+                    max_new=m, seed=seed0 + i)
+            for i, (L, m) in enumerate(zip(lens, max_new))]
+
+
+def _oneshot(cfg, params, gates, req, *, policy, attn_impl="xla",
+             greedy=True, **serve_kw):
+    """The parity oracle: this request alone, one-shot chunked engine."""
+    eng = build_engine(cfg, params, gates, policy=policy,
+                       attn_impl=attn_impl, **serve_kw)
+    return eng.generate(req.prompt[None], req.max_new, chunked=True,
+                        greedy=greedy, seed=req.seed)["ids"][0]
+
+
+# ----------------------------------------- scheduler == one-shot parity
+
+
+@pytest.mark.parametrize("attn_impl", ["xla", "pallas"])
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_scheduler_matches_oneshot_all_policies(tiny, policy, attn_impl):
+    """5 ragged requests on 2 lanes: every request's stream must equal
+    its one-shot generation, for every policy x both attention impls."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=8)
+    reqs = _requests([5, 11, 19, 8, 14], [6, 3, 8, 5, 7])
+    eng = build_engine(cfg, params, gates, policy=policy,
+                       attn_impl=attn_impl, decode_segment=4, **serve)
+    res = Scheduler(eng, n_lanes=2).run(reqs)
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy=policy,
+                        attn_impl=attn_impl, **serve)
+        np.testing.assert_array_equal(res[r.rid].ids, want,
+                                      err_msg=f"rid={r.rid}")
+        assert res[r.rid].status is Status.DONE
+
+
+def test_scheduler_matches_oneshot_temperature(tiny):
+    """Seeded temperature sampling: per-lane RNG chains must reproduce
+    each request's one-shot stream exactly."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=8, temperature=0.8)
+    reqs = _requests([5, 11, 19, 8, 14], [6, 3, 8, 5, 7], seed0=40)
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=4, **serve)
+    res = Scheduler(eng, n_lanes=3, greedy=False).run(reqs)
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy="trimkv",
+                        greedy=False, **serve)
+        np.testing.assert_array_equal(res[r.rid].ids, want)
+
+
+def test_eos_truncates_exactly(tiny):
+    """A request whose eos_id appears mid-stream retires at that token
+    (inclusive); its output is the one-shot prefix through the eos."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=8)
+    base = _requests([13], [10])[0]
+    want = _oneshot(cfg, params, gates, base, policy="trimkv", **serve)
+    eos = int(want[4])
+    first_hit = int(np.argmax(want == eos))
+    req = Request(rid=1, prompt=base.prompt, max_new=10, seed=base.seed,
+                  eos_id=eos)
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=3, **serve)
+    res = Scheduler(eng, n_lanes=2).run([req])
+    np.testing.assert_array_equal(res[1].ids, want[: first_hit + 1])
+
+
+# -------------------------------------------------------- lane lifecycle
+
+
+def _lane_leaves(state, lane):
+    """Every per-lane slice of a decode-state pytree (layers batch on
+    axis 1, tail and t on axis 0)."""
+    out = []
+    if state["layers"] is not None:
+        out += [np.asarray(l)[:, lane]
+                for l in jax.tree.leaves(state["layers"])]
+    out += [np.asarray(l)[lane] for l in jax.tree.leaves(state["tail"])]
+    out.append(np.asarray(state["t"])[lane])
+    return out
+
+
+def test_lane_reset_leaves_neighbors_bit_identical(tiny):
+    """reset_lanes clears exactly the masked lane (pos -1, beta 1,
+    aux 0, clock 0) and leaves every other lane's state bit-identical."""
+    cfg, params, gates = tiny
+    eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                       prefill_chunk=8)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (3, 20), 0, 64)
+    state, _ = eng.prefill(tokens, chunked=True)
+    before = jax.tree.map(lambda a: np.asarray(a), state)
+    after = T.reset_lanes(state, jnp.asarray([False, True, False]))
+    for lane in (0, 2):
+        for a, b in zip(_lane_leaves(before, lane),
+                        _lane_leaves(after, lane)):
+            np.testing.assert_array_equal(a, b)
+    # the reset lane's slot metadata is cleared
+    flat = jax.tree_util.tree_flatten_with_path(after)[0]
+    n_pos = 0
+    for path, leaf in flat:
+        name = next((p.key for p in reversed(path)
+                     if isinstance(p, jax.tree_util.DictKey)), None)
+        leaf = np.asarray(leaf)
+        if name == "pos":
+            lane_slice = leaf[:, 1] if leaf.ndim == 4 else leaf[1]
+            assert (lane_slice == -1).all()
+            n_pos += 1
+    assert n_pos > 0
+    assert int(np.asarray(after["t"])[1]) == 0
+
+
+def test_cache_reset_lanes_matches_full_state_reset(tiny):
+    """core.cache.reset_lanes (the per-cache primitive) and
+    transformer.reset_lanes (_LANE_RESET over the whole pytree) must
+    apply the same fills to cache leaves — they are the same invariant
+    in two places."""
+    from repro.core.cache import reset_lanes as cache_reset
+    cfg, params, gates = tiny
+    eng = build_engine(cfg, params, gates, budget=16, policy="h2o",
+                       prefill_chunk=8)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 20), 0, 64)
+    state, _ = eng.prefill(tokens, chunked=True)
+    mask = jnp.asarray([True, False])
+    full = T.reset_lanes(state, mask)
+    cache0 = jax.tree.map(lambda a: a[0], state["layers"])[0]
+    want = cache_reset(cache0, mask)
+    got = jax.tree.map(lambda a: a[0], full["layers"])[0]
+    for name in ("k", "v", "pos", "beta", "aux"):
+        np.testing.assert_array_equal(np.asarray(want[name]),
+                                      np.asarray(got[name]), err_msg=name)
+
+
+def test_ragged_prefill_matches_per_request(tiny):
+    """Mixed-length prompts packed into one padded chunk grid with
+    per-request n_valid columns produce caches and last-hiddens
+    BIT-identical to prefilling each request alone (unpadded chunk
+    count)."""
+    cfg, params, gates = tiny
+    from repro.configs import ServeConfig
+    serve = ServeConfig(budget=16, policy="trimkv", prefill_chunk=8)
+    eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                       prefill_chunk=8)
+    rng = np.random.RandomState(5)
+    lens = [5, 19, 11]
+    prompts = [rng.randint(0, 64, size=L).astype(np.int32) for L in lens]
+    C, k = 8, len(lens)
+    n_chunks = -(-max(lens) // C)
+    grid = np.zeros((k, n_chunks * C), np.int32)
+    for i, p in enumerate(prompts):
+        grid[i, : len(p)] = p
+    n_valid = np.clip(np.asarray(lens)[None, :] -
+                      np.arange(n_chunks)[:, None] * C, 0, C).astype(np.int32)
+    chunks = jnp.asarray(np.moveaxis(grid.reshape(k, n_chunks, C), 1, 0))
+    state, h_last = T.prefill_chunk_loop(
+        params, gates, cfg, chunks, jnp.asarray(n_valid),
+        T.init_decode_state(cfg, k, 16), eng.policy, serve)
+    for i, p in enumerate(prompts):
+        nc = -(-len(p) // C)
+        g = np.zeros((1, nc * C), np.int32)
+        g[0, : len(p)] = p
+        nv = np.clip(len(p) - np.arange(nc) * C, 0, C).astype(np.int32)
+        st, hl = T.prefill_chunk_loop(
+            params, gates, cfg,
+            jnp.asarray(np.moveaxis(g.reshape(1, nc, C), 1, 0)),
+            jnp.asarray(nv), T.init_decode_state(cfg, 1, 16),
+            eng.policy, serve)
+        np.testing.assert_array_equal(np.asarray(h_last)[i],
+                                      np.asarray(hl)[0])
+        for a, b in zip(_lane_leaves(state, i), _lane_leaves(st, 0)):
+            np.testing.assert_array_equal(a, b)
+    # per-lane occupancy: each lane holds min(prompt_len, budget) slots
+    from repro.core.cache import cache_len
+    layer0 = jax.tree.map(lambda a: a[0], state["layers"])[0]
+    np.testing.assert_array_equal(
+        np.asarray(cache_len(layer0, per_lane=True)),
+        np.minimum(lens, 16))
+
+
+def test_rng_reproducible_across_admission_orders(tiny):
+    """A request's temperature stream depends only on its seed: the
+    same requests submitted in a different order, on a different lane
+    count (hence different lane placement and neighbors), produce
+    identical per-request outputs."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=8, temperature=0.8,
+                 decode_segment=4)
+    reqs = _requests([5, 11, 19, 8], [6, 4, 7, 5], seed0=80)
+    outs = []
+    for n_lanes, order in ((1, [0, 1, 2, 3]), (2, [3, 1, 0, 2]),
+                           (4, [2, 0, 3, 1])):
+        eng = build_engine(cfg, params, gates, policy="trimkv", **serve)
+        res = Scheduler(eng, n_lanes=n_lanes, greedy=False).run(
+            [reqs[i] for i in order])
+        outs.append({r.rid: res[r.rid].ids for r in reqs})
+    for other in outs[1:]:
+        for rid, ids in outs[0].items():
+            np.testing.assert_array_equal(ids, other[rid])
+
+
+# ------------------------------------------------------ dispatch scaling
+
+
+def test_dispatches_scale_with_segments_not_tokens(tiny):
+    """Under churn (N requests over B < N lanes), total launches equal
+    prefill_rounds + segments + resets; doubling tokens at double the
+    segment width leaves the count unchanged — dispatches are
+    O(prefills + segments), never O(tokens) or O(requests)."""
+    cfg, params, gates = tiny
+    counts = {}
+    for seg, scale in ((4, 1), (8, 2)):
+        reqs = _requests([5, 11, 19, 8, 14], [m * scale for m in
+                                              (4, 8, 4, 8, 4)])
+        eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                           prefill_chunk=8, decode_segment=seg)
+        sched = Scheduler(eng, n_lanes=2)
+        sched.run(reqs)
+        assert eng.dispatch_count == (sched.n_prefill_rounds +
+                                      sched.n_segments + sched.n_resets)
+        counts[seg] = (eng.dispatch_count, sched.n_segments)
+    # 2x the tokens at 2x the segment width: same segment count, same
+    # dispatch count — the engine never pays per-token launches
+    assert counts[4][1] == counts[8][1]
+    assert counts[4][0] == counts[8][0]
+
+
+def test_queue_backpressure(tiny):
+    """submit() rejects beyond serve_cfg.max_queue."""
+    cfg, params, gates = tiny
+    eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                       prefill_chunk=8, max_queue=2)
+    sched = Scheduler(eng, n_lanes=1)
+    reqs = _requests([5, 6, 7], [2, 2, 2])
+    assert sched.submit(reqs[0]) and sched.submit(reqs[1])
+    assert not sched.submit(reqs[2])
+    res = sched.run()
+    assert sorted(res) == [0, 1]
