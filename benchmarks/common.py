@@ -31,6 +31,7 @@ from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_update, cosine_schedule, \
     init_opt_state
 from repro.serve.engine import build_engine
+from repro.serve.request import latency_percentiles
 from repro.train.trainer import train_loop
 
 CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench_v2")
@@ -167,6 +168,25 @@ def write_bench_json(name: str, payload) -> str:
         f.write("\n")
     print(f"[common] wrote {path}")
     return path
+
+
+def _pct(vals):
+    """Rounded latency_percentiles (all-None samples -> None fields,
+    e.g. TPOT of single-token requests)."""
+    p = latency_percentiles(vals)
+    if p is None:
+        return {"mean": None, "p50": None, "p95": None}
+    return {k: round(v, 4) for k, v in p.items()}
+
+
+def latency_stats(states):
+    """Serving latency summary over finished RequestStates: TTFT (submit
+    -> first harvested token), TPOT (per-token after the first) and
+    end-to-end latency, each as mean/p50/p95 — the SLO metrics
+    benchmarks/table8_slo.py and launch/serve.py --stream report."""
+    return {"ttft_sec": _pct([rs.ttft_sec for rs in states]),
+            "tpot_sec": _pct([rs.tpot_sec for rs in states]),
+            "latency_sec": _pct([rs.latency_sec for rs in states])}
 
 
 # ------------------------------------------------------------ measuring

@@ -10,7 +10,7 @@ import traceback
 
 from benchmarks import (fig3_pareto, fig5_interpretability, roofline,
                         table1_longproc, table3_longmem, table5_ablation,
-                        table6_throughput, table7_serving,
+                        table6_throughput, table7_serving, table8_slo,
                         table9_chunked_prefill)
 
 BENCHES = (
@@ -20,6 +20,7 @@ BENCHES = (
     ("table5_ablation", table5_ablation.run),
     ("table6_throughput", table6_throughput.run),
     ("table7_serving", table7_serving.run),
+    ("table8_slo", table8_slo.run),
     ("table9_chunked_prefill", table9_chunked_prefill.run),
     ("fig5_interpretability", fig5_interpretability.run),
     ("roofline", roofline.run),

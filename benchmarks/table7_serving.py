@@ -30,7 +30,8 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import print_table, toy_system, write_bench_json
+from benchmarks.common import latency_stats, print_table, toy_system, \
+    write_bench_json
 from repro.launch.serve import poisson_requests
 from repro.serve import Scheduler, build_engine
 
@@ -71,7 +72,6 @@ def _serve_trace(cfg, params, gates, reqs, *, lanes, budget, chunk,
     for row in rows:
         sched, results = row["sched"], row["results"]
         wall = float(np.median(row["walls"]))
-        lats = np.asarray([results[r.rid].latency_sec for r in reqs])
         emitted = sum(len(results[r.rid].tokens) for r in reqs)
         # lane-steps computed: every segment advances every lane
         lane_steps = sched.n_segments * segment * lanes
@@ -86,8 +86,9 @@ def _serve_trace(cfg, params, gates, reqs, *, lanes, budget, chunk,
             "segments": sched.n_segments,
             "prefill_rounds": sched.n_prefill_rounds,
             "dispatches": row["eng"].dispatch_count,
-            "mean_latency_sec": round(float(lats.mean()), 3),
-            "p95_latency_sec": round(float(np.percentile(lats, 95)), 3),
+            # latency_sec (end-to-end) + TTFT/TPOT, each mean/p50/p95
+            # (PR 4): tail latency, not just means
+            **latency_stats([results[r.rid] for r in reqs]),
         })
     return out
 
@@ -117,10 +118,11 @@ def run(quick: bool = False, smoke: bool = False):
     print_table(
         "table7_serving (continuous vs static batching, ragged Poisson)",
         ("mode", "lanes", "goodput_tok_s", "lane_eff", "mean_lat_s",
-         "p95_lat_s", "dispatches"),
+         "p95_lat_s", "ttft_p95_s", "tpot_p95_s", "dispatches"),
         [(r["mode"], r["lanes"], r["goodput_tok_per_sec"],
-          r["lane_efficiency"], r["mean_latency_sec"],
-          r["p95_latency_sec"], r["dispatches"]) for r in rows])
+          r["lane_efficiency"], r["latency_sec"]["mean"],
+          r["latency_sec"]["p95"], r["ttft_sec"]["p95"],
+          r["tpot_sec"]["p95"], r["dispatches"]) for r in rows])
     print(f"continuous/static goodput speedup: {speedup:.2f}x")
     return rows
 

@@ -161,6 +161,33 @@ class ServeConfig:
     # max_queue: Scheduler.submit rejects (returns False) beyond this
     # many waiting requests — the admission-control backpressure knob.
     max_queue: int = 64
+    # --- SLO-aware scheduling (docs/serving.md §Scheduling) ---
+    # sched_policy: admission order over the waiting queue.
+    #   "fifo"     — submit order (the PR-3 behavior);
+    #   "priority" — highest Request.priority first (ties FIFO);
+    #   "edf"      — earliest absolute deadline first (submit time +
+    #                Request.deadline_ms; no deadline sorts last).
+    sched_policy: str = "fifo"
+    # interleaved: run admission prefill INSIDE decode segments
+    # (T.mixed_step_loop): each segment step advances decode lanes one
+    # token AND feeds one prompt chunk per admitting lane, so a long
+    # prompt never stalls in-flight decodes (head-of-line blocking) and
+    # admission costs zero extra dispatches. False = PR-3 phased
+    # admission (whole-prompt prefill as its own dispatch, decode
+    # paused meanwhile). Scheduler(interleaved=...) overrides.
+    interleaved: bool = False
+    # prefill_budget: max prompt tokens prefilled per interleaved
+    # segment (vLLM-style chunked-prefill interleaving; 0 = unlimited).
+    # At least one chunk always proceeds per segment so admission can
+    # never starve. Ignored by phased admission.
+    prefill_budget: int = 0
+    # preempt: allow priority/edf scheduling to evict the worst running
+    # lane (lowest priority / latest deadline) when a strictly
+    # better-ranked request is waiting with no free lane. The victim is
+    # reset (T.reset_lanes) and re-queued; it restarts from scratch
+    # (recompute-style preemption), which keeps its final output
+    # token-identical to an uninterrupted run. FIFO never preempts.
+    preempt: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

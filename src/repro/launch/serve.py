@@ -25,35 +25,55 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.data.synthetic import make_batch
 from repro.models import transformer as T
 from repro.serve import Request, Scheduler, build_engine
+from repro.serve.request import latency_percentiles
 
 
 def poisson_requests(n, rate, *, vocab, prompt_lo, prompt_hi, new_lo,
-                     new_hi, seed=0, eos_id=-1):
+                     new_hi, seed=0, eos_id=-1, priority_frac=0.0,
+                     high_deadline_ms=None, low_deadline_ms=None):
     """Synthetic Poisson trace: exponential inter-arrival gaps at
     `rate` req/s, ragged prompt lengths and per-request max_new drawn
-    uniformly, one RNG seed per request."""
+    uniformly, one RNG seed per request. A `priority_frac` fraction of
+    requests is drawn as the HIGH class (priority 1, deadline
+    high_deadline_ms — the latency-sensitive traffic the priority/edf
+    admission policies protect); the rest is priority 0 with
+    low_deadline_ms (None = no deadline)."""
     rng = np.random.RandomState(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
     reqs = []
     for i in range(n):
         L = int(rng.randint(prompt_lo, prompt_hi + 1))
+        high = bool(rng.rand() < priority_frac)
         reqs.append(Request(
             rid=i, prompt=rng.randint(0, vocab, size=L).astype(np.int32),
             max_new=int(rng.randint(new_lo, new_hi + 1)), seed=i,
-            eos_id=eos_id, arrival=float(arrivals[i])))
+            eos_id=eos_id, arrival=float(arrivals[i]),
+            priority=1 if high else 0,
+            deadline_ms=high_deadline_ms if high else low_deadline_ms))
     return reqs
+
+
+def _pct(vals):
+    p = latency_percentiles(vals)
+    if p is None:
+        return "n/a"
+    return f"p50 {p['p50'] * 1e3:.1f}ms p95 {p['p95'] * 1e3:.1f}ms"
 
 
 def _run_stream(cfg, params, gates, args):
     eng = build_engine(cfg, params, gates, budget=args.budget,
                        policy=args.policy, attn_impl=args.attn_impl,
                        prefill_chunk=args.prefill_chunk,
-                       decode_segment=args.decode_segment)
+                       decode_segment=args.decode_segment,
+                       sched_policy=args.sched_policy,
+                       prefill_budget=args.prefill_budget,
+                       interleaved=args.interleaved)
     reqs = poisson_requests(
         args.requests, args.rate, vocab=cfg.vocab_size,
         prompt_lo=max(args.prompt_len // 4, 4), prompt_hi=args.prompt_len,
         new_lo=max(args.max_new // 4, 1), new_hi=args.max_new,
-        seed=args.seed)
+        seed=args.seed, priority_frac=args.priority_frac,
+        high_deadline_ms=args.deadline_ms)
     # warm-up drain on a throwaway scheduler: compiles every admission/
     # segment shape (closures are cached on the engine), so the printed
     # latencies measure serving, not XLA compilation
@@ -66,14 +86,25 @@ def _run_stream(cfg, params, gates, args):
     wall = max(rs.finish_sec for rs in results.values())
     print(f"stream: {args.requests} requests over {args.lanes} lanes "
           f"(policy={args.policy} budget={args.budget} "
-          f"segment={args.decode_segment})")
+          f"segment={args.decode_segment} sched={args.sched_policy} "
+          f"{'interleaved' if sched.interleaved else 'phased'})")
     print(f"  dispatches={eng.dispatch_count} "
           f"(prefill rounds={sched.n_prefill_rounds}, "
-          f"segments={sched.n_segments}, resets={sched.n_resets}) "
-          f"— O(segments), never O(tokens)")
+          f"segments={sched.n_segments}, resets={sched.n_resets}, "
+          f"preempted={sched.n_preempted}) — O(segments), never O(tokens)")
     print(f"  {total_tok} tokens in {wall:.2f}s "
           f"= {total_tok / max(wall, 1e-9):.1f} tok/s; latency "
           f"mean {np.mean(lats):.2f}s p95 {np.percentile(lats, 95):.2f}s")
+    # per-priority-class SLO stats: TTFT (submit -> first token) and
+    # TPOT (per-token after the first) tails — the numbers priority/edf
+    # admission exists to protect for the high class
+    for prio in sorted({r.priority for r in reqs}, reverse=True):
+        states = [results[r.rid] for r in reqs if r.priority == prio]
+        missed = [rs for rs in states if rs.missed_deadline]
+        print(f"  priority {prio} ({len(states)} reqs): "
+              f"ttft {_pct([rs.ttft_sec for rs in states])}, "
+              f"tpot {_pct([rs.tpot_sec for rs in states])}, "
+              f"deadline misses {len(missed)}")
     for r in reqs[: min(4, len(reqs))]:
         rs = results[r.rid]
         print(f"  req {r.rid}: prompt {r.prompt_len} -> "
@@ -116,6 +147,23 @@ def main():
     ap.add_argument("--decode-segment", type=int, default=16,
                     help="--stream: fused decode steps per scheduler "
                          "segment")
+    # --- SLO-aware scheduling (PR 4, docs/serving.md §Scheduling) ---
+    ap.add_argument("--sched-policy", choices=("fifo", "priority", "edf"),
+                    default="fifo",
+                    help="--stream: admission order over the waiting "
+                         "queue (priority/edf may also preempt)")
+    ap.add_argument("--interleaved", action="store_true",
+                    help="--stream: thread admission prefill chunks "
+                         "INSIDE decode segments (T.mixed_step_loop) "
+                         "instead of phased whole-prompt admission")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="--stream: max prompt tokens prefilled per "
+                         "interleaved segment (0 = unlimited)")
+    ap.add_argument("--priority-frac", type=float, default=0.25,
+                    help="--stream: fraction of requests in the high "
+                         "priority class (priority 1 + deadline)")
+    ap.add_argument("--deadline-ms", type=float, default=500.0,
+                    help="--stream: latency SLO for the high class")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

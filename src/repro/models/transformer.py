@@ -563,6 +563,96 @@ def decode_segment_loop(params, gate_params, cfg, state, tok, keys, active,
             jnp.moveaxis(toks, 0, 1), jnp.moveaxis(emits, 0, 1))
 
 
+def mixed_step_loop(params, gate_params, cfg, state, tok, keys, active,
+                    n_emitted, max_new, eos_id, chunks, chunk_valid,
+                    finish, new_keys, policy, serve_cfg, *, greedy=True,
+                    temperature=0.0, attn_impl="xla"):
+    """Interleaved prefill/decode segment (the PR-4 SLO hot path): ONE
+    lax.scan whose every step advances the active DECODE lanes by one
+    token AND feeds at most one prefill chunk per ADMITTING lane — so a
+    long prompt entering the server no longer stalls in-flight decodes
+    (head-of-line blocking), and admission costs ZERO extra dispatches:
+    it rides inside the segment program.
+
+    Per step j the body runs two complementary masked sub-steps over the
+    same B-lane state:
+
+      1. decode_step with `active` as the mask (exactly the
+         decode_segment_loop body: emit carried token, feed it, sample
+         the next per-lane) — prefilling/empty lanes are frozen
+         bit-identically;
+      2. _prefill_chunk_step on chunks[j] with per-lane chunk_valid[j]
+         (a lane's next prompt chunk, or 0 = frozen row) — decode lanes
+         have zero-valid rows and are frozen bit-identically.
+
+    A lane is in at most ONE mode per step (the scheduler guarantees
+    active[lane] => chunk_valid[j, lane] == 0), so the combined effect
+    per lane equals whichever sub-step owns it, and decode lanes are
+    bit-identical to a pure decode_segment_loop.
+
+    The prefill -> decode transition happens INSIDE the scan: at the
+    step where a lane consumes its final chunk (finish[j, lane]), the
+    body computes logits from that lane's last real token's hidden,
+    argmaxes the first token into the lane's carry (matching one-shot
+    generate, whose first token is always the greedy prefill argmax),
+    installs the lane's per-request RNG key from new_keys, zeroes
+    n_emitted and activates the lane — it starts emitting at step j+1
+    (or, when it finishes on the segment's last step, in the next
+    segment: the carries persist on the scheduler).
+
+    chunks: [n_steps, B, C] int32; chunk_valid: [n_steps, B] int32 (0 =
+    no chunk for that lane this step); finish: [n_steps, B] bool (lane
+    consumes its LAST chunk this step); new_keys: [B, 2] uint32 (RNG
+    key for every lane that finishes prefill within this segment).
+    Other operands as decode_segment_loop. Returns the same tuple:
+    (state, tok, keys, active, n_emitted, ids [B, n_steps],
+    emitted [B, n_steps])."""
+    def body(carry, xs):
+        state, tok, keys, active, n_emitted = carry
+        ctoks, nv, fin = xs
+        # --- decode sub-step (mirrors decode_segment_loop exactly:
+        # emit the carried token, feed it, sample the next) ---
+        emit = active
+        state, logits = decode_step(params, gate_params, cfg, state, tok,
+                                    policy, attn_impl=attn_impl,
+                                    active=active)
+        nxt, keys = sample_token_lanes(logits, keys, greedy=greedy,
+                                       temperature=temperature)
+        n_emitted = n_emitted + emit.astype(jnp.int32)
+        done = emit & (((eos_id >= 0) & (tok == eos_id)) |
+                       (n_emitted >= max_new))
+        new_tok = jnp.where(emit, nxt, tok)
+        dec_active = active & ~done
+        # --- prefill sub-step (zero-valid rows frozen bit-identically)
+        state, h_last = _prefill_chunk_step(params, gate_params, cfg,
+                                            ctoks, state, policy,
+                                            serve_cfg, None, n_valid=nv)
+        # --- transition: finishing lanes take their greedy first token
+        # (one-shot parity: Engine.generate argmaxes the prefill
+        # logits even under temperature sampling) and their request's
+        # RNG key AFTER this step's split, so their first sampled draw
+        # consumes split(seed_key) exactly like a fresh decode_loop.
+        # The full-vocab projection only pays on steps where some lane
+        # actually finishes (at most one step per lane per prompt)
+        first = jax.lax.cond(
+            jnp.any(fin),
+            lambda h: jnp.argmax(compute_logits(params, cfg, h),
+                                 axis=-1).astype(jnp.int32),
+            lambda h: jnp.zeros((h.shape[0],), jnp.int32),
+            h_last)
+        new_tok = jnp.where(fin, first, new_tok)
+        keys = jnp.where(fin[:, None], new_keys, keys)
+        n_emitted = jnp.where(fin, 0, n_emitted)
+        return (state, new_tok, keys, dec_active | fin, n_emitted), \
+            (tok, emit)
+
+    (state, tok, keys, active, n_emitted), (toks, emits) = jax.lax.scan(
+        body, (state, tok, keys, active, n_emitted),
+        (chunks, chunk_valid, finish))
+    return (state, tok, keys, active, n_emitted,
+            jnp.moveaxis(toks, 0, 1), jnp.moveaxis(emits, 0, 1))
+
+
 # reset targets per leaf name: slot metadata is invalidated (pos -1
 # makes a slot invisible everywhere), recurrences and clocks zero; K/V
 # and cross-memory bytes are left in place — unreadable once pos < 0,

@@ -140,9 +140,22 @@ class Engine:
                 max_new, eos, serve.decode_segment, policy, greedy=greedy,
                 temperature=serve.temperature, attn_impl=impl)
 
+        def _mixed(state, tok, keys, active, n_emitted, max_new, eos,
+                   chunks, chunk_valid, finish, new_keys):
+            # interleaved prefill/decode segment (SLO scheduling): the
+            # admission prefill rides INSIDE the decode segment, one
+            # chunk per admitting lane per step — one dispatch covers
+            # both, so admission never pauses in-flight decodes
+            return T.mixed_step_loop(
+                params, gates, cfg, state, tok, keys, active, n_emitted,
+                max_new, eos, chunks, chunk_valid, finish, new_keys,
+                policy, serve, greedy=greedy,
+                temperature=serve.temperature, attn_impl=impl)
+
         closures = {
             "admit": jax.jit(_admit, donate_argnums=(0,)),
             "segment": jax.jit(_segment, donate_argnums=(0,)),
+            "mixed": jax.jit(_mixed, donate_argnums=(0,)),
             "reset": jax.jit(T.reset_lanes, donate_argnums=(0,)),
         }
         self._lane_closures[greedy] = closures

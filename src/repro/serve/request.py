@@ -3,10 +3,14 @@
 A `Request` is one user generation: a ragged prompt (any length), its
 own decode budget (`max_new`), its own RNG seed (temperature sampling
 reproduces the request's one-shot stream regardless of which lane or
-admission order it lands on — see transformer.sample_token_lanes) and
-an optional stop token. `RequestState` is the scheduler-side
-bookkeeping: queue -> lane -> done lifecycle, emitted tokens, and the
-timestamps the serving benchmarks turn into latency/goodput.
+admission order it lands on — see transformer.sample_token_lanes), an
+optional stop token, and its SLO metadata: a `priority` class (higher =
+more urgent; the `priority` admission policy serves strictly by it) and
+an optional `deadline_ms` latency target (the `edf` policy admits by
+earliest absolute deadline and preemption targets deadline risk).
+`RequestState` is the scheduler-side bookkeeping: queue -> lane -> done
+lifecycle, emitted tokens, and the timestamps the serving benchmarks
+turn into TTFT/TPOT/latency percentiles.
 """
 from __future__ import annotations
 
@@ -17,9 +21,24 @@ from typing import List, Optional
 import numpy as np
 
 
+def latency_percentiles(vals):
+    """mean/p50/p95 (seconds) of a latency sample, dropping None
+    entries (e.g. TPOT of single-token requests); None when nothing
+    remains. The single definition behind the stream launcher's
+    printout and the BENCH_serve/BENCH_slo records, so the two can
+    never disagree on what a percentile means."""
+    vals = [v for v in vals if v is not None]
+    if not vals:
+        return None
+    a = np.asarray(vals, np.float64)
+    return {"mean": float(a.mean()),
+            "p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95))}
+
+
 class Status(enum.Enum):
     QUEUED = "queued"        # accepted, waiting for a free lane
-    RUNNING = "running"      # occupying a lane (prefilled, decoding)
+    RUNNING = "running"      # occupying a lane (prefilling or decoding)
     DONE = "done"            # retired on EOS or max_new
 
 
@@ -28,13 +47,19 @@ class Request:
     """One generation request. prompt: int32 token ids, any length >= 1
     (prompts are RAGGED — the scheduler packs mixed lengths into one
     padded chunk grid). eos_id -1 = never stop early. arrival: optional
-    stream-mode arrival offset in seconds (Poisson traces)."""
+    stream-mode arrival offset in seconds (Poisson traces).
+    priority: admission class, higher wins under sched_policy="priority"
+    (ties FIFO). deadline_ms: optional latency SLO relative to submit;
+    sched_policy="edf" admits by earliest absolute deadline and the
+    preemptor may evict a later-deadline lane for an earlier one."""
     rid: int
     prompt: np.ndarray
     max_new: int
     seed: int = 0
     eos_id: int = -1
     arrival: float = 0.0
+    priority: int = 0
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self):
         prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -42,6 +67,9 @@ class Request:
             raise ValueError(f"request {self.rid}: empty prompt")
         if self.max_new < 1:
             raise ValueError(f"request {self.rid}: max_new must be >= 1")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(f"request {self.rid}: deadline_ms must be "
+                             f"positive (or None for no deadline)")
         object.__setattr__(self, "prompt", prompt)
 
     @property
@@ -56,9 +84,14 @@ class RequestState:
     status: Status = Status.QUEUED
     lane: int = -1                      # -1 while queued / after retire
     tokens: List[int] = dataclasses.field(default_factory=list)
+    submit_seq: int = 0                 # FIFO tie-break order
     submit_sec: float = 0.0             # when the scheduler accepted it
     admit_sec: Optional[float] = None   # when it won a lane (prefill)
+    first_token_sec: Optional[float] = None  # first emission harvested
     finish_sec: Optional[float] = None  # when it retired
+    n_preempts: int = 0                 # times evicted mid-flight and
+    #                                     re-queued (restart-from-scratch
+    #                                     recompute, vLLM-style)
 
     @property
     def rid(self) -> int:
@@ -73,7 +106,38 @@ class RequestState:
         return np.asarray(self.tokens, np.int32)
 
     @property
+    def deadline_sec(self) -> float:
+        """Absolute deadline on the scheduler clock (inf = none)."""
+        if self.request.deadline_ms is None:
+            return float("inf")
+        return self.submit_sec + self.request.deadline_ms / 1000.0
+
+    @property
     def latency_sec(self) -> Optional[float]:
         if self.finish_sec is None:
             return None
         return self.finish_sec - self.submit_sec
+
+    @property
+    def ttft_sec(self) -> Optional[float]:
+        """Time to first token (submit -> first harvested emission)."""
+        if self.first_token_sec is None:
+            return None
+        return self.first_token_sec - self.submit_sec
+
+    @property
+    def tpot_sec(self) -> Optional[float]:
+        """Time per output token after the first (None until done or
+        when only one token was emitted)."""
+        if self.finish_sec is None or self.first_token_sec is None:
+            return None
+        n = len(self.tokens)
+        if n < 2:
+            return None
+        return (self.finish_sec - self.first_token_sec) / (n - 1)
+
+    @property
+    def missed_deadline(self) -> Optional[bool]:
+        if self.finish_sec is None or self.request.deadline_ms is None:
+            return None
+        return self.finish_sec > self.deadline_sec

@@ -1,32 +1,49 @@
-"""Lane-based continuous batching over the fused serving loops.
+"""Lane-based continuous batching over the fused serving loops, with
+SLO-aware admission (PR 4).
 
 The `Scheduler` owns B fixed LANES (the batch dim of one shared decode
 state). Each lane holds at most one in-flight request; the scheduler
 
-  1. ADMITS queued requests into free lanes: their ragged prompts are
-     packed into ONE padded chunk grid (per-request n_valid column in
-     the [n_chunks, k] valid matrix) and prefilled by a single
-     T.prefill_chunk_loop dispatch, then scattered into the free lanes
-     with T.insert_lanes;
-  2. runs bounded fused DECODE SEGMENTS (T.decode_segment_loop:
+  1. ADMITS queued requests into free lanes in `sched_policy` order
+     (fifo | priority | edf). Phased mode packs their ragged prompts
+     into ONE padded chunk grid and prefills them with a single
+     T.prefill_chunk_loop dispatch before decoding resumes; INTERLEAVED
+     mode (ServeConfig.interleaved / Scheduler(interleaved=True))
+     instead threads one prompt chunk per admitting lane into every
+     step of the next decode segments (T.mixed_step_loop), bounded by
+     `prefill_budget` tokens per segment — so a long prompt never
+     stalls in-flight decodes and admission costs ZERO extra
+     dispatches;
+  2. runs bounded fused DECODE SEGMENTS (T.decode_segment_loop, or
+     T.mixed_step_loop while any lane is still prefilling:
      serve_cfg.decode_segment steps under one lax.scan, per-lane active
      masks / clocks / RNG chains / max_new / eos);
   3. RETIRES lanes whose request emitted its eos_id or max_new-th token
      at the segment boundary (T.reset_lanes — in the slot-dense layout
      a lane reset is pos := -1, no paged block tables) and immediately
-     refills them from the queue.
+     refills them from the queue. Under priority/edf it may also
+     PREEMPT the worst running lane (lowest priority / latest deadline)
+     when a strictly better-ranked request waits with no free lane: the
+     victim is reset and re-queued, restarting from scratch
+     (recompute-style preemption), so its final output stays
+     token-identical to an uninterrupted run.
 
 Dispatch accounting: every device program this scheduler launches bumps
 the owning Engine's `dispatch_count`, and the total is
-O(prefill rounds + segments) — NEVER O(tokens) or O(requests)
-(tests/test_scheduler.py asserts the exact formula under churn).
+n_prefill_rounds + n_segments + n_resets — O(prefill rounds +
+segments), NEVER O(tokens) or O(requests); interleaved mode keeps
+n_prefill_rounds at 0 because admission rides inside the segments
+(tests/test_scheduler.py asserts the exact formula under churn and
+mixed traffic).
 
 Correctness contract: each request's output is token-identical to a
 one-shot `Engine.generate(prompt[None], max_new, chunked=True,
-seed=seed)` (truncated at its eos), for every eviction policy and both
-attention impls — lanes are frozen bit-identically while inactive, each
-lane's RNG chain is seeded from its request alone, and the ragged
-prefill is bit-identical to per-request prefill.
+seed=seed)` (truncated at its eos), for every eviction policy, both
+attention impls, both admission modes, any admission order and under
+preemption — lanes are frozen bit-identically while inactive, each
+lane's RNG chain is seeded from its request alone, and both the ragged
+phased prefill and the per-lane interleaved chunk schedule replay the
+exact chunk sequence one-shot chunked prefill runs.
 
 `continuous=False` degrades the SAME machinery to static batching
 (admission waits until every lane is free, finished lanes idle until
@@ -35,7 +52,7 @@ the whole wave drains) — the baseline the serving benchmark
 """
 from __future__ import annotations
 
-import collections
+import dataclasses
 import time
 from typing import Dict, Iterable, List, Optional
 
@@ -44,6 +61,23 @@ import numpy as np
 
 from repro.serve.engine import Engine
 from repro.serve.request import Request, RequestState, Status
+
+SCHED_POLICIES = ("fifo", "priority", "edf")
+
+
+def _chunk_prompt(prompt: np.ndarray, C: int):
+    """One prompt -> its padded chunk sequence, EXACTLY as one-shot
+    chunked prefill chunks it: full C-token chunks, then the
+    zero-padded tail. Returns (chunks [n_chunks, C] int32,
+    n_valid [n_chunks] int32). Both admission paths chunk through
+    here, so the interleaved per-lane schedule and the phased ragged
+    grid replay the same chunk sequence by construction."""
+    n_chunks = -(-prompt.size // C)
+    grid = np.zeros((n_chunks * C,), np.int32)
+    grid[: prompt.size] = prompt
+    n_valid = np.clip(prompt.size - np.arange(n_chunks) * C,
+                      0, C).astype(np.int32)
+    return grid.reshape(n_chunks, C), n_valid
 
 
 def _prng_keys(seeds) -> np.ndarray:
@@ -59,9 +93,29 @@ def _prng_keys(seeds) -> np.ndarray:
     return arr
 
 
+@dataclasses.dataclass
+class _LanePrefill:
+    """Host-side progress of one interleaved admission prefill: the
+    request's prompt chunked exactly as one-shot chunked prefill chunks
+    it ([n_chunks, C] full chunks then the padded tail), fed one chunk
+    per segment step until done."""
+    chunks: np.ndarray                 # [n_chunks, C] int32
+    n_valid: np.ndarray                # [n_chunks] int32 (C ... tail)
+    next_chunk: int = 0
+
+    @property
+    def n_chunks(self) -> int:
+        return int(self.chunks.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return self.next_chunk >= self.n_chunks
+
+
 class Scheduler:
     def __init__(self, engine: Engine, n_lanes: int, *, greedy: bool = True,
-                 continuous: bool = True):
+                 continuous: bool = True,
+                 interleaved: Optional[bool] = None):
         if engine.cfg.family in ("vlm", "encdec"):
             raise ValueError(
                 "continuous batching does not yet plumb per-request "
@@ -72,6 +126,13 @@ class Scheduler:
         self.policy = engine.policy
         self.n_lanes = n_lanes
         self.continuous = continuous
+        self.interleaved = (self.serve.interleaved if interleaved is None
+                            else interleaved)
+        self.sched_policy = self.serve.sched_policy
+        if self.sched_policy not in SCHED_POLICIES:
+            raise ValueError(f"unknown sched_policy "
+                             f"{self.sched_policy!r}; "
+                             f"expected one of {SCHED_POLICIES}")
         self.greedy = greedy or self.serve.temperature == 0.0
         # jitted closures live on the Engine (cached per greedy flag) so
         # successive schedulers — e.g. benchmark warm-up then measured
@@ -79,6 +140,7 @@ class Scheduler:
         closures = engine.lane_closures(self.greedy)
         self._admit_fn = closures["admit"]
         self._segment = closures["segment"]
+        self._mixed = closures["mixed"]
         self._reset = closures["reset"]
 
         # device lane state
@@ -91,14 +153,20 @@ class Scheduler:
         self.max_new = np.ones(n_lanes, np.int32)
         self.eos = np.full(n_lanes, -1, np.int32)
         self.lane_req: List[Optional[RequestState]] = [None] * n_lanes
-        self.queue: collections.deque = collections.deque()
+        # interleaved admission: per-lane prompt chunk progress (None =
+        # lane is free or already decoding)
+        self.lane_prefill: List[Optional[_LanePrefill]] = [None] * n_lanes
+        self.queue: List[RequestState] = []
+        self._submit_seq = 0
         self.results: Dict[int, RequestState] = {}
         # dispatch accounting (engine.dispatch_count gets every launch):
         # total launches == n_prefill_rounds + n_segments + n_resets —
-        # O(prefills + segments), asserted by tests/test_scheduler.py
+        # O(prefills + segments), asserted by tests/test_scheduler.py;
+        # interleaved admission keeps n_prefill_rounds at 0
         self.n_prefill_rounds = 0
         self.n_segments = 0
         self.n_resets = 0
+        self.n_preempted = 0
         self._t0 = time.monotonic()
 
     # ---------------------------------------------------------- queueing
@@ -112,10 +180,28 @@ class Scheduler:
         already waiting — the admission-control backpressure."""
         if len(self.queue) >= self.serve.max_queue:
             return False
-        rs = RequestState(request=request, submit_sec=self._now())
+        rs = RequestState(request=request, submit_seq=self._submit_seq,
+                          submit_sec=self._now())
+        self._submit_seq += 1
         self.queue.append(rs)
         self.results[request.rid] = rs
         return True
+
+    def _order_key(self, rs: RequestState):
+        """Admission order under sched_policy — smaller = served first.
+        fifo: submit order. priority: highest Request.priority, ties
+        FIFO. edf: earliest absolute deadline (submit + deadline_ms;
+        no deadline = inf, sorts last), ties FIFO."""
+        if self.sched_policy == "priority":
+            return (-rs.request.priority, rs.submit_seq)
+        if self.sched_policy == "edf":
+            return (rs.deadline_sec, rs.submit_seq)
+        return (rs.submit_seq,)
+
+    def _pop_next(self) -> RequestState:
+        rs = min(self.queue, key=self._order_key)
+        self.queue.remove(rs)
+        return rs
 
     @property
     def n_running(self) -> int:
@@ -124,6 +210,69 @@ class Scheduler:
     @property
     def idle(self) -> bool:
         return not self.queue and self.n_running == 0
+
+    # -------------------------------------------------------- preemption
+
+    def _outranks(self, cand: RequestState, victim: RequestState) -> bool:
+        """Strict SLO dominance — the only condition under which a
+        waiting request may evict a running one. Strictness (plus FIFO
+        never preempting) rules out preemption cycles: a re-queued
+        victim can never bounce back into its preemptor's lane."""
+        if self.sched_policy == "priority":
+            return cand.request.priority > victim.request.priority
+        if self.sched_policy == "edf":
+            # deadline risk: an earlier-absolute-deadline request is
+            # waiting while a later-deadline one holds the lane
+            return cand.deadline_sec < victim.deadline_sec
+        return False
+
+    def _maybe_preempt(self) -> None:
+        """Retire the worst running lane (lowest priority / latest
+        deadline) when a strictly better-ranked request waits with no
+        free lane. The victim restarts from scratch on re-admission
+        (tokens discarded, RNG chain re-seeded from its request), so
+        its final output is token-identical to an uninterrupted run —
+        recompute-style preemption, no state swap-out. All victims of
+        one round share a single vectorized reset dispatch."""
+        if (not self.serve.preempt or self.sched_policy == "fifo"
+                or not self.continuous or not self.queue):
+            return
+        victims: List[int] = []
+        running = {l: rs for l, rs in enumerate(self.lane_req)
+                   if rs is not None}
+        if len(running) < self.n_lanes:
+            return                       # free lanes: plain admission
+        # the freed lanes are NOT reserved: _admit re-selects by
+        # _order_key, which hands them to these same candidates
+        pool = sorted(self.queue, key=self._order_key)
+        for cand in pool:
+            if not running:
+                break
+            worst_lane = max(running, key=lambda l:
+                             self._order_key(running[l]))
+            if not self._outranks(cand, running[worst_lane]):
+                break                    # pool is sorted: nobody else can
+            victims.append(worst_lane)
+            del running[worst_lane]
+        if not victims:
+            return
+        mask = np.zeros(self.n_lanes, bool)
+        mask[victims] = True
+        self.eng.dispatch_count += 1
+        self.n_resets += 1
+        self.state = self._reset(self.state, jnp.asarray(mask))
+        for lane in victims:
+            rs = self.lane_req[lane]
+            rs.status, rs.lane = Status.QUEUED, -1
+            rs.admit_sec = rs.first_token_sec = None
+            rs.tokens.clear()
+            rs.n_preempts += 1
+            self.n_preempted += 1
+            self.lane_req[lane] = None
+            self.lane_prefill[lane] = None
+            self.active[lane] = False
+            self.queue.append(rs)        # re-queued; _order_key decides
+            #                              when it gets a lane back
 
     # --------------------------------------------------------- admission
 
@@ -137,28 +286,33 @@ class Scheduler:
         admission closure compiles once per n_chunks — never per
         admission size k, which varies freely under churn."""
         C = self.serve.prefill_chunk
-        lens = np.zeros(self.n_lanes, np.int64)
-        lens[: len(batch)] = [rs.request.prompt_len for rs in batch]
-        n_chunks = max(1, int(-(-lens.max() // C)))
-        grid = np.zeros((self.n_lanes, n_chunks * C), np.int32)
-        for i, rs in enumerate(batch):
-            grid[i, : lens[i]] = rs.request.prompt
-        n_valid = np.clip(lens[None, :] - np.arange(n_chunks)[:, None] * C,
-                          0, C).astype(np.int32)
-        chunks = np.moveaxis(grid.reshape(self.n_lanes, n_chunks, C), 1, 0)
+        per = [_chunk_prompt(rs.request.prompt, C) for rs in batch]
+        n_chunks = max(ch.shape[0] for ch, _ in per)
+        chunks = np.zeros((n_chunks, self.n_lanes, C), np.int32)
+        n_valid = np.zeros((n_chunks, self.n_lanes), np.int32)
+        for i, (ch, nv) in enumerate(per):
+            chunks[: ch.shape[0], i] = ch
+            n_valid[: nv.shape[0], i] = nv
         return jnp.asarray(chunks), jnp.asarray(n_valid)
 
-    def _admit(self) -> int:
-        """Fill free lanes from the queue: the whole admission batch —
-        ragged prefill, first tokens, lane scatter — is ONE dispatch
-        however many requests it packs."""
+    def _claim_lanes(self) -> List[int]:
+        """Common admission gate: which free lanes can be filled now
+        (static batching waits for the full drain)."""
         free = [l for l in range(self.n_lanes) if self.lane_req[l] is None]
         if not self.continuous and len(free) < self.n_lanes:
-            return 0          # static batching: wait for the full drain
+            return []
+        return free
+
+    def _admit(self) -> int:
+        """Phased admission (PR 3): fill free lanes from the queue —
+        the whole admission batch (ragged prefill, first tokens, lane
+        scatter) is ONE dispatch however many requests it packs, but
+        decode lanes sit idle while it runs."""
+        free = self._claim_lanes()
         k = min(len(free), len(self.queue))
         if k == 0:
             return 0
-        batch = [self.queue.popleft() for _ in range(k)]
+        batch = [self._pop_next() for _ in range(k)]
         lanes = free[:k]
         chunks, n_valid = self._pack_prompts(batch)
         # pad rows scatter to index n_lanes: OUT OF BOUNDS, so jax
@@ -181,18 +335,106 @@ class Scheduler:
             self.eos[lane] = rs.request.eos_id
         return k
 
+    def _admit_interleaved(self) -> int:
+        """Interleaved admission: assign requests to free lanes and
+        chunk their prompts host-side; the prefill itself is threaded
+        into the coming mixed segments (zero dedicated dispatches).
+        The lane was reset at retire time (pos := -1 makes every slot
+        invisible and lose every top-M merge), so chunk-prefilling
+        straight into it is token-identical to one-shot prefill into a
+        fresh state."""
+        free = self._claim_lanes()
+        k = min(len(free), len(self.queue))
+        if k == 0:
+            return 0
+        now = self._now()
+        C = self.serve.prefill_chunk
+        for lane in free[:k]:
+            rs = self._pop_next()
+            self.lane_prefill[lane] = _LanePrefill(
+                *_chunk_prompt(rs.request.prompt, C))
+            rs.status, rs.lane, rs.admit_sec = Status.RUNNING, lane, now
+            self.lane_req[lane] = rs
+            self.active[lane] = False    # activates inside the scan at
+            #                              its finish step
+            self.n_emitted[lane] = 0
+            self.max_new[lane] = rs.request.max_new
+            self.eos[lane] = rs.request.eos_id
+        return k
+
     # ---------------------------------------------------------- decoding
 
+    def _build_prefill_schedule(self, n_steps: int):
+        """Lay this segment's prompt chunks onto the [n_steps, B] grid:
+        one chunk per prefilling lane per step, lanes visited in
+        sched_policy order, capped at serve.prefill_budget prompt
+        tokens per segment (0 = unlimited; the first chunk of a segment
+        always proceeds so admission can never starve). Returns device
+        operands (chunks, n_valid, finish), the RNG keys for lanes
+        finishing within this segment, and the per-lane chunk counts to
+        commit after the dispatch."""
+        C = self.serve.prefill_chunk
+        B = self.n_lanes
+        chunks = np.zeros((n_steps, B, C), np.int32)
+        nv = np.zeros((n_steps, B), np.int32)
+        finish = np.zeros((n_steps, B), bool)
+        new_keys = np.zeros((B, 2), np.uint32)
+        budget = self.serve.prefill_budget
+        lanes = [l for l in range(B) if self.lane_prefill[l] is not None]
+        lanes.sort(key=lambda l: self._order_key(self.lane_req[l]))
+        progress = {l: self.lane_prefill[l].next_chunk for l in lanes}
+        spent = 0
+        for j in range(n_steps):
+            for lane in lanes:
+                pf = self.lane_prefill[lane]
+                i = progress[lane]
+                if i >= pf.n_chunks:
+                    continue
+                tok_count = int(pf.n_valid[i])
+                if budget > 0 and spent > 0 and spent + tok_count > budget:
+                    continue
+                chunks[j, lane] = pf.chunks[i]
+                nv[j, lane] = tok_count
+                if i == pf.n_chunks - 1:
+                    finish[j, lane] = True
+                    new_keys[lane] = _prng_keys(
+                        [self.lane_req[lane].request.seed])[0]
+                progress[lane] = i + 1
+                spent += tok_count
+        scheduled = {l: progress[l] - self.lane_prefill[l].next_chunk
+                     for l in lanes}
+        return chunks, nv, finish, new_keys, scheduled
+
     def _run_segment(self) -> List[RequestState]:
-        """One fused decode segment over all lanes; harvest emissions,
-        retire lanes that finished inside the segment."""
+        """One fused segment over all lanes — plain decode, or the
+        mixed prefill/decode program when any lane is still prefilling
+        (interleaved admission). Harvest emissions, retire lanes that
+        finished inside the segment."""
+        n_steps = self.serve.decode_segment
+        prefilling = any(pf is not None for pf in self.lane_prefill)
         self.eng.dispatch_count += 1
         self.n_segments += 1
-        (self.state, self.tok, self.keys, active_d, n_emitted_d, ids,
-         emitted) = self._segment(
-            self.state, self.tok, self.keys, jnp.asarray(self.active),
-            jnp.asarray(self.n_emitted), jnp.asarray(self.max_new),
-            jnp.asarray(self.eos))
+        if prefilling:
+            chunks, nv, finish, new_keys, scheduled = \
+                self._build_prefill_schedule(n_steps)
+            (self.state, self.tok, self.keys, active_d, n_emitted_d, ids,
+             emitted) = self._mixed(
+                self.state, self.tok, self.keys, jnp.asarray(self.active),
+                jnp.asarray(self.n_emitted), jnp.asarray(self.max_new),
+                jnp.asarray(self.eos), jnp.asarray(chunks),
+                jnp.asarray(nv), jnp.asarray(finish),
+                jnp.asarray(new_keys))
+            for lane, n in scheduled.items():
+                pf = self.lane_prefill[lane]
+                pf.next_chunk += n
+                if pf.done:
+                    self.lane_prefill[lane] = None   # decoding now
+        else:
+            (self.state, self.tok, self.keys, active_d, n_emitted_d, ids,
+             emitted) = self._segment(
+                self.state, self.tok, self.keys, jnp.asarray(self.active),
+                jnp.asarray(self.n_emitted), jnp.asarray(self.max_new),
+                jnp.asarray(self.eos))
         ids, emitted = np.asarray(ids), np.asarray(emitted)
         # np.array (copy): asarray views of device buffers are read-only
         self.active = np.array(active_d)
@@ -202,8 +444,11 @@ class Scheduler:
             rs = self.lane_req[lane]
             if rs is None:
                 continue
-            rs.tokens.extend(int(x) for x in ids[lane][emitted[lane]])
-            if not self.active[lane]:
+            new_toks = ids[lane][emitted[lane]]
+            if new_toks.size and not rs.tokens:
+                rs.first_token_sec = now
+            rs.tokens.extend(int(x) for x in new_toks)
+            if not self.active[lane] and self.lane_prefill[lane] is None:
                 rs.status, rs.finish_sec, rs.lane = Status.DONE, now, -1
                 self.lane_req[lane] = None
                 finished.append(rs)
@@ -220,8 +465,16 @@ class Scheduler:
     # --------------------------------------------------------- top level
 
     def step(self) -> List[RequestState]:
-        """One scheduling round: admit into free lanes, then run one
-        decode segment. Returns the requests that finished."""
+        """One scheduling round: preempt if an SLO demands it, admit
+        into free lanes, then run one fused segment. Returns the
+        requests that finished."""
+        self._maybe_preempt()
+        if self.interleaved:
+            self._admit_interleaved()
+            if self.active.any() or any(pf is not None
+                                        for pf in self.lane_prefill):
+                return self._run_segment()
+            return []
         self._admit()
         if self.active.any():
             return self._run_segment()
@@ -234,17 +487,17 @@ class Scheduler:
         respect_arrivals, each request is submitted once wall-clock
         reaches its `arrival` offset (fast-forwarding when the engine
         goes idle, so a sparse Poisson trace never sleeps)."""
-        pending = collections.deque(
-            sorted(requests, key=lambda r: r.arrival))
+        pending = sorted(requests, key=lambda r: r.arrival)
+        pending.reverse()                # pop() takes the earliest
         while pending or self.queue or self.n_running:
             # submit due arrivals; a max_queue rejection leaves the
             # request at the head of `pending` to retry once the queue
             # drains (nothing is silently dropped)
             now = self._now()
             while pending and (not respect_arrivals or
-                               pending[0].arrival <= now or self.idle):
-                if not self.submit(pending[0]):
+                               pending[-1].arrival <= now or self.idle):
+                if not self.submit(pending[-1]):
                     break
-                pending.popleft()
+                pending.pop()
             self.step()
         return self.results

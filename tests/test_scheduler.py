@@ -1,10 +1,12 @@
-"""Continuous-batching scheduler tests (the PR-3 serving subsystem).
+"""Continuous-batching + SLO scheduler tests (PR 3 + PR 4 serving).
 
-Claims under test (docs/serving.md §Continuous batching):
+Claims under test (docs/serving.md §Continuous batching, §Scheduling):
   1. Scheduler outputs are token-identical to one-shot
      Engine.generate(prompt[None], chunked=True) PER REQUEST — ragged
      prompt lengths, per-request max_new, B < N lanes — for every
-     eviction policy, on both attention impls, greedy and temperature.
+     eviction policy, on both attention impls, greedy and temperature,
+     for BOTH admission modes (phased and interleaved
+     T.mixed_step_loop), and the two modes agree token-for-token.
   2. Lane lifecycle is surgically clean: resetting a lane leaves every
      neighbor lane's cache bit-identical; inactive lanes are frozen
      bit-identically through decode segments.
@@ -14,8 +16,13 @@ Claims under test (docs/serving.md §Continuous batching):
   4. Per-request RNG: temperature streams depend only on the request's
      seed — not on lane placement, admission order, or neighbors.
   5. Dispatches scale with segments (and prefill rounds), never with
-     tokens or requests: the exact counter formula holds under churn.
+     tokens or requests: the exact counter formula holds under churn;
+     interleaved admission keeps prefill rounds at ZERO.
   6. EOS retires a lane early, truncating exactly at the stop token.
+  7. SLO admission: priority/edf order the queue under backpressure,
+     the interleaved prefill schedule honors the per-segment token
+     budget, and a preempted-then-readmitted request's final output is
+     token-identical to its uninterrupted run.
 """
 import dataclasses
 
@@ -43,10 +50,13 @@ def tiny():
     return cfg, params, gates
 
 
-def _requests(lens, max_new, seed0=0):
+def _requests(lens, max_new, seed0=0, priority=None, deadline_ms=None):
     rng = np.random.RandomState(7)
     return [Request(rid=i, prompt=rng.randint(0, 64, size=L).astype(np.int32),
-                    max_new=m, seed=seed0 + i)
+                    max_new=m, seed=seed0 + i,
+                    priority=0 if priority is None else priority[i],
+                    deadline_ms=None if deadline_ms is None
+                    else deadline_ms[i])
             for i, (L, m) in enumerate(zip(lens, max_new))]
 
 
@@ -66,30 +76,42 @@ def _oneshot(cfg, params, gates, req, *, policy, attn_impl="xla",
 @pytest.mark.parametrize("policy", ALL_POLICIES)
 def test_scheduler_matches_oneshot_all_policies(tiny, policy, attn_impl):
     """5 ragged requests on 2 lanes: every request's stream must equal
-    its one-shot generation, for every policy x both attention impls."""
+    its one-shot generation, for every policy x both attention impls,
+    under BOTH admission modes — phased (PR 3) and interleaved
+    (T.mixed_step_loop, PR 4) — which therefore also agree with each
+    other token-for-token on the decode lanes."""
     cfg, params, gates = tiny
     serve = dict(budget=16, prefill_chunk=8)
     reqs = _requests([5, 11, 19, 8, 14], [6, 3, 8, 5, 7])
     eng = build_engine(cfg, params, gates, policy=policy,
                        attn_impl=attn_impl, decode_segment=4, **serve)
-    res = Scheduler(eng, n_lanes=2).run(reqs)
+    res_phased = Scheduler(eng, n_lanes=2, interleaved=False).run(reqs)
+    res_inter = Scheduler(eng, n_lanes=2, interleaved=True).run(reqs)
     for r in reqs:
         want = _oneshot(cfg, params, gates, r, policy=policy,
                         attn_impl=attn_impl, **serve)
-        np.testing.assert_array_equal(res[r.rid].ids, want,
-                                      err_msg=f"rid={r.rid}")
-        assert res[r.rid].status is Status.DONE
+        np.testing.assert_array_equal(res_phased[r.rid].ids, want,
+                                      err_msg=f"phased rid={r.rid}")
+        np.testing.assert_array_equal(res_inter[r.rid].ids, want,
+                                      err_msg=f"interleaved rid={r.rid}")
+        assert res_phased[r.rid].status is Status.DONE
+        assert res_inter[r.rid].status is Status.DONE
 
 
-def test_scheduler_matches_oneshot_temperature(tiny):
+@pytest.mark.parametrize("interleaved", [False, True])
+def test_scheduler_matches_oneshot_temperature(tiny, interleaved):
     """Seeded temperature sampling: per-lane RNG chains must reproduce
-    each request's one-shot stream exactly."""
+    each request's one-shot stream exactly — in the interleaved mode
+    the lane's key is installed INSIDE the scan at its prefill-finish
+    step, after that step's all-lane split, so the first sampled token
+    still consumes split(seed_key) like a fresh decode loop."""
     cfg, params, gates = tiny
     serve = dict(budget=16, prefill_chunk=8, temperature=0.8)
     reqs = _requests([5, 11, 19, 8, 14], [6, 3, 8, 5, 7], seed0=40)
     eng = build_engine(cfg, params, gates, policy="trimkv",
                        decode_segment=4, **serve)
-    res = Scheduler(eng, n_lanes=3, greedy=False).run(reqs)
+    res = Scheduler(eng, n_lanes=3, greedy=False,
+                    interleaved=interleaved).run(reqs)
     for r in reqs:
         want = _oneshot(cfg, params, gates, r, policy="trimkv",
                         greedy=False, **serve)
@@ -271,6 +293,21 @@ def test_dispatches_scale_with_segments_not_tokens(tiny):
     assert counts[4][0] == counts[8][0]
 
 
+def test_dispatches_interleaved_zero_prefill_rounds(tiny):
+    """Interleaved admission folds the prefill into the segment
+    programs: the formula still holds with n_prefill_rounds pinned at
+    ZERO under mixed traffic (long + short prompts churning over
+    B < N lanes), and dispatches stay O(segments)."""
+    cfg, params, gates = tiny
+    reqs = _requests([21, 5, 19, 8, 14], [4, 8, 4, 8, 4])
+    eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                       prefill_chunk=8, decode_segment=4)
+    sched = Scheduler(eng, n_lanes=2, interleaved=True)
+    sched.run(reqs)
+    assert sched.n_prefill_rounds == 0
+    assert eng.dispatch_count == sched.n_segments + sched.n_resets
+
+
 def test_queue_backpressure(tiny):
     """submit() rejects beyond serve_cfg.max_queue."""
     cfg, params, gates = tiny
@@ -282,3 +319,104 @@ def test_queue_backpressure(tiny):
     assert not sched.submit(reqs[2])
     res = sched.run()
     assert sorted(res) == [0, 1]
+
+
+# ------------------------------------------------- SLO-aware scheduling
+
+
+def test_priority_admission_order_under_backpressure(tiny):
+    """One lane, whole queue waiting: sched_policy='priority' admits
+    strictly by Request.priority (ties FIFO), not submit order."""
+    cfg, params, gates = tiny
+    eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                       prefill_chunk=8, decode_segment=4,
+                       sched_policy="priority")
+    reqs = _requests([5, 6, 7, 6], [3, 3, 3, 3],
+                     priority=[0, 5, 1, 5])
+    res = Scheduler(eng, n_lanes=1).run(reqs)
+    order = [rs.rid for rs in
+             sorted(res.values(), key=lambda rs: rs.admit_sec)]
+    assert order == [1, 3, 2, 0]        # priority desc, FIFO ties
+
+
+def test_edf_admission_order_under_backpressure(tiny):
+    """One lane, whole queue waiting: sched_policy='edf' admits by
+    earliest absolute deadline; requests without a deadline go last."""
+    cfg, params, gates = tiny
+    eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                       prefill_chunk=8, decode_segment=4,
+                       sched_policy="edf")
+    reqs = _requests([5, 6, 7, 6], [3, 3, 3, 3],
+                     deadline_ms=[900.0, 5000.0, 100.0, None])
+    res = Scheduler(eng, n_lanes=1).run(reqs)
+    order = [rs.rid for rs in
+             sorted(res.values(), key=lambda rs: rs.admit_sec)]
+    assert order == [2, 0, 1, 3]
+
+
+@pytest.mark.parametrize("interleaved", [False, True])
+def test_preempted_request_matches_uninterrupted(tiny, interleaved):
+    """A high-priority arrival evicts the running low-priority lane
+    (reset + re-queue, recompute-style); the victim restarts from
+    scratch on re-admission, so BOTH requests' final outputs are
+    token-identical to their uninterrupted one-shot runs, and the
+    dispatch formula keeps counting the preemption reset."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=8)
+    reqs = _requests([9, 7], [16, 4], priority=[0, 3])
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=2, sched_policy="priority", **serve)
+    sched = Scheduler(eng, n_lanes=1, interleaved=interleaved)
+    sched.submit(reqs[0])
+    for _ in range(4):                  # rid 0 mid-generation
+        sched.step()
+    sched.submit(reqs[1])
+    res = sched.run()
+    assert res[0].n_preempts >= 1
+    assert res[1].finish_sec < res[0].finish_sec
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy="trimkv", **serve)
+        np.testing.assert_array_equal(res[r.rid].ids, want,
+                                      err_msg=f"rid={r.rid}")
+    assert eng.dispatch_count == (sched.n_prefill_rounds +
+                                  sched.n_segments + sched.n_resets)
+
+
+def test_prefill_budget_schedule_and_parity(tiny):
+    """serve_cfg.prefill_budget caps prompt tokens per interleaved
+    segment (first chunk exempt so admission can never starve), and a
+    budget-throttled drain stays token-identical to one-shot."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=8)
+    reqs = _requests([21, 19], [3, 3])
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=4, prefill_budget=8, **serve)
+    sched = Scheduler(eng, n_lanes=2, interleaved=True)
+    for r in reqs:
+        sched.submit(r)
+    sched._admit_interleaved()
+    chunks, nv, finish, _, scheduled = sched._build_prefill_schedule(4)
+    # 8-token budget with 8-token chunks: exactly one chunk per segment
+    assert int(nv.sum()) == 8 and sum(scheduled.values()) == 1
+    assert not finish.any()             # 3-chunk prompts can't finish yet
+    res = sched.run()
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy="trimkv", **serve)
+        np.testing.assert_array_equal(res[r.rid].ids, want)
+
+
+def test_slo_metadata_recorded(tiny):
+    """TTFT/TPOT/deadline accounting: timestamps come back ordered and
+    deadline misses are judged against submit + deadline_ms."""
+    cfg, params, gates = tiny
+    eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                       prefill_chunk=8, decode_segment=4,
+                       sched_policy="edf")
+    reqs = _requests([5, 9], [4, 6], deadline_ms=[1e7, None])
+    res = Scheduler(eng, n_lanes=2, interleaved=True).run(reqs)
+    for rs in res.values():
+        assert rs.submit_sec <= rs.admit_sec <= rs.first_token_sec \
+            <= rs.finish_sec
+        assert rs.ttft_sec >= 0 and rs.tpot_sec >= 0
+    assert res[0].missed_deadline is False      # 10^4-second deadline
+    assert res[1].missed_deadline is None       # no deadline given
