@@ -37,10 +37,20 @@ def run_stream(cfg, params, gates, args):
     reqs = []
     for i in range(args.requests):
         L = int(rng.randint(args.prompt_len // 3, args.prompt_len + 1))
+        extra = None
+        if eng.mem_key is not None:
+            # cross-memory families: each request carries its own
+            # (ragged-length) vision/encoder memory; the scheduler
+            # packs them into a per-lane slab masked by mem_len
+            S, feat = eng.mem_shape
+            S_i = int(rng.randint(max(S // 2, 1), S + 1))
+            extra = {eng.mem_key:
+                     rng.randn(S_i, feat).astype(np.float32) * 0.1}
         reqs.append(Request(
             rid=i, prompt=rng.randint(0, cfg.vocab_size, size=L)
             .astype(np.int32),
-            max_new=int(rng.randint(4, args.max_new + 1)), seed=i))
+            max_new=int(rng.randint(4, args.max_new + 1)), seed=i,
+            extra_inputs=extra))
     # warm-up drain so the printed latencies measure serving, not XLA
     # compilation (closures are cached on the engine)
     Scheduler(eng, n_lanes=args.lanes).run(reqs)
@@ -88,9 +98,6 @@ def main():
     gates = T.init_gate_params(kg, cfg)
 
     if args.stream:
-        if cfg.family in ("vlm", "encdec"):
-            raise SystemExit("--stream serves self-attention families; "
-                             "vlm/encdec cross-memory is one-shot only")
         run_stream(cfg, params, gates, args)
         return
 

@@ -65,6 +65,42 @@ def reset_lanes(cache, lane_mask):
     return new
 
 
+def memory_pos(mem_len, S: int):
+    """Pseudo slot positions for a cross-attention memory slab: 0 for
+    the first mem_len slots of each lane, -1 beyond — the same metadata
+    convention the KV cache uses (pos < 0 == invisible to every
+    attention read). mem_len: scalar or [B] int32 (per-lane memory
+    length under continuous batching; 0 = no memory, e.g. a reset
+    lane). Returns [B, 1, S] int32, broadcastable against [B, Hkv, S].
+    """
+    ml = lane_t(mem_len)                                    # [B,1,1]
+    iota = jnp.arange(S, dtype=jnp.int32)[None, None, :]
+    return jnp.where(iota < ml, jnp.int32(0), jnp.int32(-1))
+
+
+def memory_attend(q_t, xk, xv, mem_len):
+    """Decode-time cross-attention of one query over the per-lane
+    memory slab (vision tokens / encoder frames), masked by mem_len.
+
+    Reuses decode_attend's grouped einsum by presenting the memory as a
+    pseudo slot cache whose positions are memory_pos(mem_len, S): valid
+    slots sit at position 0, padded/invalidated slots at -1 — so a lane
+    whose memory was invalidated (mem_len == 0, e.g. after
+    reset_lanes) reads exactly ZERO memory (output 0), never a previous
+    occupant's bytes.
+
+    q_t: [B, Hq, Dh] (no RoPE — memory is position-free); xk, xv:
+    [B, S, Hkv, Dh]; mem_len: scalar or [B] int32. Returns
+    [B, Hq, Dh] f32.
+    """
+    B, S, Hkv, _ = xk.shape
+    pos = jnp.broadcast_to(memory_pos(mem_len, S), (B, Hkv, S))
+    mem_cache = {"k": jnp.moveaxis(xk, 1, 2),
+                 "v": jnp.moveaxis(xv, 1, 2), "pos": pos}
+    out, _ = decode_attend(q_t, mem_cache)
+    return out
+
+
 def cache_insert(cache, k_t, v_t, beta_t, t, keep_scores_fn,
                  incoming_score=None, incoming_aux=None):
     """Insert one token; evict the lowest-keep-score entry if full.

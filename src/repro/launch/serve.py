@@ -30,26 +30,36 @@ from repro.serve.request import latency_percentiles
 
 def poisson_requests(n, rate, *, vocab, prompt_lo, prompt_hi, new_lo,
                      new_hi, seed=0, eos_id=-1, priority_frac=0.0,
-                     high_deadline_ms=None, low_deadline_ms=None):
+                     high_deadline_ms=None, low_deadline_ms=None,
+                     mem_key=None, mem_shape=None):
     """Synthetic Poisson trace: exponential inter-arrival gaps at
     `rate` req/s, ragged prompt lengths and per-request max_new drawn
     uniformly, one RNG seed per request. A `priority_frac` fraction of
     requests is drawn as the HIGH class (priority 1, deadline
     high_deadline_ms — the latency-sensitive traffic the priority/edf
     admission policies protect); the rest is priority 0 with
-    low_deadline_ms (None = no deadline)."""
+    low_deadline_ms (None = no deadline). For cross-memory families
+    pass mem_key/mem_shape (Engine.mem_key / Engine.mem_shape): each
+    request then carries its own random memory of RAGGED length (half
+    to full slab) — the per-lane cross-memory path under load."""
     rng = np.random.RandomState(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
     reqs = []
     for i in range(n):
         L = int(rng.randint(prompt_lo, prompt_hi + 1))
         high = bool(rng.rand() < priority_frac)
+        extra = None
+        if mem_key is not None:
+            S, feat = mem_shape
+            S_i = int(rng.randint(max(S // 2, 1), S + 1))
+            extra = {mem_key: rng.randn(S_i, feat).astype(np.float32) * 0.1}
         reqs.append(Request(
             rid=i, prompt=rng.randint(0, vocab, size=L).astype(np.int32),
             max_new=int(rng.randint(new_lo, new_hi + 1)), seed=i,
             eos_id=eos_id, arrival=float(arrivals[i]),
             priority=1 if high else 0,
-            deadline_ms=high_deadline_ms if high else low_deadline_ms))
+            deadline_ms=high_deadline_ms if high else low_deadline_ms,
+            extra_inputs=extra))
     return reqs
 
 
@@ -73,7 +83,8 @@ def _run_stream(cfg, params, gates, args):
         prompt_lo=max(args.prompt_len // 4, 4), prompt_hi=args.prompt_len,
         new_lo=max(args.max_new // 4, 1), new_hi=args.max_new,
         seed=args.seed, priority_frac=args.priority_frac,
-        high_deadline_ms=args.deadline_ms)
+        high_deadline_ms=args.deadline_ms,
+        mem_key=eng.mem_key, mem_shape=eng.mem_shape)
     # warm-up drain on a throwaway scheduler: compiles every admission/
     # segment shape (closures are cached on the engine), so the printed
     # latencies measure serving, not XLA compilation

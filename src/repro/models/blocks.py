@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core import gates as gates_lib
 from repro.core.cache import (cache_insert, cache_topm_merge, decode_attend,
-                              init_cache)
+                              init_cache, memory_attend, memory_pos)
 from repro.core.losses import capacity_loss_chunked
 from repro.models.common import (NEG_INF, apply_rope, chunked_attention,
                                  dense_apply, dense_init, mlp_apply,
@@ -150,6 +150,11 @@ def init_block_state(cfg, kind: str, batch: int, budget: int, dtype):
                             dtype),
             "xv": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim),
                             dtype),
+            # per-lane valid memory length: cross-attention masks slots
+            # >= mem_len, so a lane with 0 reads NO memory at all (the
+            # state a reset lane is left in — stale xk/xv bytes become
+            # unreadable, like pos := -1 for the KV cache)
+            "mem_len": jnp.zeros((batch,), jnp.int32),
         }
     if kind == "recurrent":
         w = cfg.lru_width
@@ -292,7 +297,7 @@ def _qkv(p, cfg, normed, positions):
 
 
 def _attend_full(cfg, q, k, v, *, log_beta=None, causal=True, window=0,
-                 q_offset=0, attn_impl="xla"):
+                 q_offset=0, attn_impl="xla", kv_positions=None):
     """Full-sequence attention, context-parallel when configured.
 
     Context parallelism (§Perf train iteration 2): shard_map over the
@@ -306,6 +311,12 @@ def _attend_full(cfg, q, k, v, *, log_beta=None, causal=True, window=0,
     XLA streaming path — on the plain path AND inside each CP shard:
     the kernel takes the (traced) absolute q_offset, so the shard
     prefill no longer silently falls back to XLA.
+
+    kv_positions: optional [B, Tk] absolute key positions with -1
+    marking MASKED keys (the padded tail of a ragged cross-memory
+    batch; chunked_attention drops pos<0 keys from every query). Only
+    the plain XLA path supports it — callers that pass it (the
+    bidirectional encoder) never select pallas or context parallelism.
     """
     kw = dict(log_beta=log_beta, causal=causal, window=window,
               q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
@@ -318,8 +329,15 @@ def _attend_full(cfg, q, k, v, *, log_beta=None, causal=True, window=0,
                 q_l, k_f, v_f, lb_f, causal=causal, window=window,
                 q_offset=off, impl="pallas")
         return chunked_attention(q_l, k_f, v_f, q_offset=off,
+                                 kv_positions=kv_positions,
                                  **{**kw, "log_beta": lb_f})
 
+    if kv_positions is not None:
+        if attn_impl == "pallas":
+            raise NotImplementedError(
+                "kv_positions masking is an XLA-path feature "
+                "(encoder / cross-memory attention never runs pallas)")
+        return attend(q, k, v, log_beta, q_offset)
     T = q.shape[1]
     mesh = None
     if cfg.context_parallel:
@@ -357,9 +375,11 @@ def _mesh_size(mesh, axes) -> int:
 
 
 def self_attn_train(p, g, cfg, x, kind, *, gated, cap_M, q_offset=0,
-                    causal=True):
+                    causal=True, kv_positions=None):
     """Training-mode (full-sequence) self-attention; retention-gated when
-    `gated` (paper Eq. 3). Returns (out, aux)."""
+    `gated` (paper Eq. 3). kv_positions: optional [B, T] key positions
+    with -1 masking padded keys (ragged bidirectional encoder batches).
+    Returns (out, aux)."""
     B, T, _ = x.shape
     normed = rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
     positions = q_offset + jnp.broadcast_to(jnp.arange(T)[None], (B, T))
@@ -376,22 +396,31 @@ def self_attn_train(p, g, cfg, x, kind, *, gated, cap_M, q_offset=0,
                                                log_beta=log_beta)
     window = cfg.window if kind == "local" else 0
     out = _attend_full(cfg, q, k, v, log_beta=log_beta, causal=causal,
-                       window=window, q_offset=q_offset)
+                       window=window, q_offset=q_offset,
+                       kv_positions=kv_positions)
     out = dense_apply(p["attn"]["wo"], out.reshape(B, T, cfg.q_dim))
     return out, aux
 
 
-def cross_attn_apply(p, cfg, x, memory_kv):
-    """x: [B,T,d] or [B,d]; memory_kv = (xk, xv): [B,S,Hkv,Dh]."""
+def cross_attn_apply(p, cfg, x, memory_kv, mem_len=None):
+    """x: [B,T,d] or [B,d]; memory_kv = (xk, xv): [B,S,Hkv,Dh].
+    mem_len: optional scalar or [B] valid memory length — keys at
+    slots >= mem_len are masked out of every query (the padded tail of
+    a ragged cross-memory batch; a lane with mem_len 0 attends to
+    NOTHING and the output for that row is exactly zero)."""
     single = x.ndim == 2
     if single:
         x = x[:, None]
     B, T, _ = x.shape
     q = _split_heads(dense_apply(p["wq"], x), cfg.num_heads, cfg.head_dim)
     xk, xv = memory_kv
+    S = xk.shape[1]
+    if mem_len is None:
+        kv_pos = jnp.zeros((B, S), jnp.int32)
+    else:
+        kv_pos = jnp.broadcast_to(memory_pos(mem_len, S)[:, 0], (B, S))
     out = chunked_attention(q, xk, xv, causal=False,
-                            kv_positions=jnp.zeros(
-                                (B, xk.shape[1]), jnp.int32),
+                            kv_positions=kv_pos,
                             q_block=cfg.attn_q_block,
                             kv_block=cfg.attn_kv_block,
                             unroll=cfg.unroll_layers)
@@ -412,18 +441,21 @@ def make_memory_kv(p, cfg, memory):
 
 
 def apply_block_train(p, g, cfg, kind, x, *, gated=False, cap_M=None,
-                      memory=None, causal=True):
+                      memory=None, mem_len=None, causal=True,
+                      kv_positions=None):
     aux = {"cap": jnp.zeros((), jnp.float32), "beta": None,
            "router": jnp.zeros((), jnp.float32)}
     if kind in ("global", "local", "cross"):
         attn_out, a_aux = self_attn_train(p, g, cfg, x, kind, gated=gated,
-                                          cap_M=cap_M, causal=causal)
+                                          cap_M=cap_M, causal=causal,
+                                          kv_positions=kv_positions)
         aux.update({k2: a_aux[k2] for k2 in ("cap", "beta")})
         x = x + attn_out
         if kind == "cross":
             normed = rmsnorm_apply(p["normx"], x, cfg.norm_eps)
             mem_kv = make_memory_kv(p["xattn"], cfg, memory)
-            xo = cross_attn_apply(p["xattn"], cfg, normed, mem_kv)
+            xo = cross_attn_apply(p["xattn"], cfg, normed, mem_kv,
+                                  mem_len=mem_len)
             x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * xo
         normed2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
         ffn_out, router_aux = _ffn_apply(p["ffn"], normed2, cfg)
@@ -544,12 +576,13 @@ def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy,
                               .astype(x_t.dtype))
         if kind == "cross":
             normedx = rmsnorm_apply(p["normx"], x, cfg.norm_eps)
-            xo = cross_attn_apply(p["xattn"], cfg, normedx,
-                                  (state["xk"], state["xv"]))
+            xo = _cross_attn_decode(p["xattn"], cfg, normedx, state, t,
+                                    attn_impl)
             x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * xo
         normed2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
         ffn_out, _ = _ffn_apply(p["ffn"], normed2[:, None], cfg)
-        new_state = ({"cache": cache, "xk": state["xk"], "xv": state["xv"]}
+        new_state = ({"cache": cache, "xk": state["xk"], "xv": state["xv"],
+                      "mem_len": state["mem_len"]}
                      if kind == "cross" else cache)
         if active is not None:
             new_state = _select_rows(active, new_state, state)
@@ -578,6 +611,35 @@ def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy,
             new_state = _select_rows(active, new_state, state)
         return x_t + out, new_state, None
     raise ValueError(kind)
+
+
+def _cross_attn_decode(p, cfg, x_t, state, t, attn_impl):
+    """Decode-time cross-attention over the per-lane memory slab,
+    masked by state["mem_len"] — the memory is presented as a pseudo
+    slot cache (valid slots at position 0, slots >= mem_len at -1), so
+    both impls reuse the decode-attention mask plumbing: the XLA path
+    runs cache.memory_attend (grouped einsum, no materialized GQA
+    repeat) and the pallas path runs the flash-decode kernel. A lane
+    whose memory was invalidated (mem_len == 0, e.g. reset between
+    requests) reads exactly zero memory. x_t: [B, d] -> [B, d]."""
+    B = x_t.shape[0]
+    q = _split_heads(dense_apply(p["wq"], x_t), cfg.num_heads,
+                     cfg.head_dim)                         # [B,Hq,Dh]
+    S = state["xk"].shape[1]
+    if attn_impl == "pallas":
+        # lazy import: the pallas toolchain loads only when the serving
+        # path actually selects it (ops.py convention)
+        from repro.kernels import ops as kernel_ops
+        pos = jnp.broadcast_to(memory_pos(state["mem_len"], S),
+                               (B, cfg.num_kv_heads, S))
+        out = kernel_ops.decode_attention(
+            q, jnp.moveaxis(state["xk"], 1, 2),
+            jnp.moveaxis(state["xv"], 1, 2), pos, t, impl="pallas")
+    else:
+        out = memory_attend(q, state["xk"], state["xv"],
+                            state["mem_len"])
+    return dense_apply(p["wo"],
+                       out.reshape(B, cfg.q_dim).astype(x_t.dtype))
 
 
 def _probs_to_kv(probs, cfg):
@@ -614,15 +676,17 @@ def _mamba_step(p, cfg, x_t, state):
 
 
 def apply_block_prefill(p, g, cfg, kind, x, state, *, policy, budget,
-                        memory=None, obs_window=32, q_offset=0,
-                        attn_impl="xla"):
+                        memory=None, mem_len=None, obs_window=32,
+                        q_offset=0, attn_impl="xla"):
     """Single-shot prefill over x [B,T,d] with an empty prior state:
     full (chunked) attention over the sequence, then compress the chunk
     into the bounded cache via top-M keep scores. memory: [B,S,d] cross
-    tokens (vision / encoder output). Returns (x_out, new_state, aux).
-    attn_impl "pallas" routes the sequence attention through the
-    retention flash kernel (any q_offset, even traced — the CP shard
-    path runs the kernel per shard; interpret off-TPU)."""
+    tokens (vision / encoder output); mem_len: per-row valid memory
+    length ([B] or scalar; None = all S rows valid). Returns
+    (x_out, new_state, aux). attn_impl "pallas" routes the sequence
+    attention through the retention flash kernel (any q_offset, even
+    traced — the CP shard path runs the kernel per shard; interpret
+    off-TPU)."""
     B, T, _ = x.shape
     if kind in ("global", "local", "cross"):
         cache_in = state["cache"] if kind == "cross" else state
@@ -662,9 +726,14 @@ def apply_block_prefill(p, g, cfg, kind, x, state, *, policy, budget,
         if kind == "cross":
             mem_kv = make_memory_kv(p["xattn"], cfg, memory)
             normedx = rmsnorm_apply(p["normx"], x, cfg.norm_eps)
-            xo = cross_attn_apply(p["xattn"], cfg, normedx, mem_kv)
+            xo = cross_attn_apply(p["xattn"], cfg, normedx, mem_kv,
+                                  mem_len=mem_len)
             x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * xo
-            new_state = {"cache": cache, "xk": mem_kv[0], "xv": mem_kv[1]}
+            ml = jnp.full((B,), memory.shape[1], jnp.int32) \
+                if mem_len is None else \
+                jnp.broadcast_to(jnp.asarray(mem_len, jnp.int32), (B,))
+            new_state = {"cache": cache, "xk": mem_kv[0],
+                         "xv": mem_kv[1], "mem_len": ml}
         normed2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
         ffn_out, _ = _ffn_apply(p["ffn"], normed2, cfg)
         return x + ffn_out, new_state, None
@@ -783,12 +852,15 @@ def _chunk_attend(q, k_c, v_c, cache, chunk_pos, window):
 
 
 def apply_block_prefill_chunk(p, g, cfg, kind, x, state, t0, *, policy,
-                              obs_window=32, memory=None, n_valid=None,
+                              obs_window=32, n_valid=None,
                               attn_impl="xla"):
     """Continue prefill with chunk x [B,C,d] given existing state.
     t0: absolute position of the chunk's first token — scalar, or [B]
     when lanes run on their own clocks (ragged continuous-batching
     admission: every request's chunk starts at its own position).
+    Cross blocks read their memory K/V (and the per-lane mem_len mask)
+    from the state — install it up front with
+    transformer.install_memory.
 
     n_valid: number of real tokens in the chunk — None (= all C), a
     scalar (uniform batch), or a [B] vector (ragged prompts: each
@@ -856,10 +928,11 @@ def apply_block_prefill_chunk(p, g, cfg, kind, x, state, t0, *, policy,
         if kind == "cross":
             mem_kv = (state["xk"], state["xv"])
             normedx = rmsnorm_apply(p["normx"], x, cfg.norm_eps)
-            xo = cross_attn_apply(p["xattn"], cfg, normedx, mem_kv)
+            xo = cross_attn_apply(p["xattn"], cfg, normedx, mem_kv,
+                                  mem_len=state["mem_len"])
             x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * xo
             new_state = {"cache": new_cache, "xk": state["xk"],
-                         "xv": state["xv"]}
+                         "xv": state["xv"], "mem_len": state["mem_len"]}
         normed2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
         ffn_out, _ = _ffn_apply(p["ffn"], normed2, cfg)
         if row_ok is not None:

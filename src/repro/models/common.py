@@ -113,6 +113,13 @@ def _attend_block(q, k, v, bias, mask, carry):
     s = jnp.where(mask, s, NEG_INF)
     m_new = jnp.maximum(m, jnp.max(s, axis=-1))
     p = jnp.exp(s - m_new[..., None])
+    # re-zero masked keys: in a FULLY-masked block m_new is still
+    # NEG_INF, so exp(s - m_new) = exp(0) = 1 for every masked key —
+    # without this a row with no visible keys (e.g. cross-memory
+    # mem_len == 0) would return the mean of all values instead of 0
+    # (the decode paths already zero this case). For partially-masked
+    # blocks p was exactly 0 there already, so nothing else changes.
+    p = jnp.where(mask, p, 0.0)
     scale = jnp.exp(m - m_new)
     l_new = l * scale + jnp.sum(p, axis=-1)
     acc_new = acc * scale[..., None] + jnp.einsum(
@@ -259,5 +266,8 @@ def full_attention_ref(q, k, v, *, log_beta=None, causal=True, window=0,
         s = s + jnp.where(mask, bias, 0.0)
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows: softmax over all-NEG_INF is uniform — zero it
+    # so the oracle matches chunked_attention's all-masked-row == 0
+    p = jnp.where(mask, p, 0.0)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
     return out.astype(q.dtype)

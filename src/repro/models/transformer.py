@@ -116,11 +116,25 @@ def _take_unit(stacked, i):
     return jax.tree.map(lambda a: a[i], stacked)
 
 
-def _encoder_forward(enc_params, cfg, source_embeds):
-    """Bidirectional encoder over stub frame embeddings [B,S,d]."""
+def _encoder_forward(enc_params, cfg, source_embeds, mem_len=None):
+    """Bidirectional encoder over stub frame embeddings [B,S,d].
+    mem_len: optional [B] valid frame counts for a ragged batch padded
+    to a shared S — padded frames are masked out of every (non-causal)
+    attention read, so each row's valid prefix is bit-identical to
+    encoding that row alone at its own length. Padded ROWS of the
+    output are garbage; downstream cross-attention masks them by the
+    same mem_len."""
+    kv_positions = None
+    if mem_len is not None:
+        S = source_embeds.shape[1]
+        iota = jnp.arange(S, dtype=jnp.int32)[None, :]
+        kv_positions = jnp.where(
+            iota < jnp.asarray(mem_len, jnp.int32)[:, None], iota, -1)
+
     def body(h, up):
         h, _ = blocks.apply_block_train(up[0], None, cfg, "global", h,
-                                        causal=False)
+                                        causal=False,
+                                        kv_positions=kv_positions)
         return h, None
 
     h, _ = jax.lax.scan(body, source_embeds, enc_params["layers"],
@@ -132,16 +146,31 @@ def _encoder_forward(enc_params, cfg, source_embeds):
 
 
 def _memory_from_inputs(params, cfg, extra_inputs):
-    """Project stub frontend embeddings into d_model memory tokens."""
+    """Project stub frontend embeddings into d_model memory tokens.
+
+    Returns (memory [B,S,d], mem_len [B]) — or (None, None) for
+    families without cross-attention memory. extra_inputs may carry a
+    per-row "mem_len" ([B] int32) marking each row's valid length
+    inside a padded [B,S,feat] batch (ragged continuous-batching
+    admission); without it every row is fully valid. Rows beyond
+    mem_len are masked out of the encoder (so padding never
+    contaminates real frames) and out of every cross-attention read."""
+    mem_len = extra_inputs.get("mem_len")
+    if mem_len is not None:
+        mem_len = jnp.asarray(mem_len, jnp.int32)
     if cfg.family == "vlm":
         vis = extra_inputs["vision_embeds"]            # [B,S,vision_dim]
-        return (vis @ params["vis_proj"]["w"]).astype(
-            to_dtype(cfg.dtype))
-    if cfg.family == "encdec":
+        memory = (vis @ params["vis_proj"]["w"]).astype(to_dtype(cfg.dtype))
+    elif cfg.family == "encdec":
         src = extra_inputs["source_embeds"]            # [B,S,d_model]
-        return _encoder_forward(params["encoder"], cfg,
-                                src.astype(to_dtype(cfg.dtype)))
-    return None
+        memory = _encoder_forward(params["encoder"], cfg,
+                                  src.astype(to_dtype(cfg.dtype)),
+                                  mem_len=mem_len)
+    else:
+        return None, None
+    if mem_len is None:
+        mem_len = jnp.full((memory.shape[0],), memory.shape[1], jnp.int32)
+    return memory, mem_len
 
 
 # ----------------------------------------------------------------- train
@@ -160,7 +189,7 @@ def forward_train(params, gate_params, cfg, tokens, *, gated=False,
     """
     unit, U, R, tail = _unit_and_counts(cfg)
     extra_inputs = extra_inputs or {}
-    memory = _memory_from_inputs(params, cfg, extra_inputs)
+    memory, mem_len = _memory_from_inputs(params, cfg, extra_inputs)
     h = jnp.take(params["embed"], tokens, axis=0)
 
     def unit_body(h, xs):
@@ -170,7 +199,7 @@ def forward_train(params, gate_params, cfg, tokens, *, gated=False,
             g = ug[i] if ug is not None else None
             h, aux = blocks.apply_block_train(
                 up[i], g, cfg, kind, h, gated=gated, cap_M=cap_M,
-                memory=memory)
+                memory=memory, mem_len=mem_len)
             cap = cap + aux["cap"]
             router = router + aux["router"]
         return h, (cap, router)
@@ -188,7 +217,7 @@ def forward_train(params, gate_params, cfg, tokens, *, gated=False,
         g = (gate_params or {}).get("tail", (None,) * len(tail))[i]
         h, aux = blocks.apply_block_train(params["tail"][i], g, cfg, kind,
                                           h, gated=gated, cap_M=cap_M,
-                                          memory=memory)
+                                          memory=memory, mem_len=mem_len)
         cap_total += aux["cap"]
         router_total += aux["router"]
     h = rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
@@ -235,7 +264,7 @@ def prefill(params, gate_params, cfg, tokens, state, policy, serve_cfg, *,
     Returns (state, last_hidden [B,d])."""
     unit, U, R, tail = _unit_and_counts(cfg)
     extra_inputs = extra_inputs or {}
-    memory = _memory_from_inputs(params, cfg, extra_inputs)
+    memory, mem_len = _memory_from_inputs(params, cfg, extra_inputs)
     h = jnp.take(params["embed"], tokens, axis=0)
     T = tokens.shape[1]
     attn_impl = getattr(serve_cfg, "attn_impl", "xla")
@@ -247,7 +276,7 @@ def prefill(params, gate_params, cfg, tokens, state, policy, serve_cfg, *,
             g = ug[i] if ug is not None else None
             h, ns, _ = blocks.apply_block_prefill(
                 up[i], g, cfg, kind, h, st[i], policy=policy,
-                budget=serve_cfg.budget, memory=memory,
+                budget=serve_cfg.budget, memory=memory, mem_len=mem_len,
                 obs_window=serve_cfg.obs_window, attn_impl=attn_impl)
             new_states.append(ns)
         return h, tuple(new_states)
@@ -267,7 +296,8 @@ def prefill(params, gate_params, cfg, tokens, state, policy, serve_cfg, *,
         h, ns, _ = blocks.apply_block_prefill(
             params["tail"][i], g, cfg, kind, h, state["tail"][i],
             policy=policy, budget=serve_cfg.budget, memory=memory,
-            obs_window=serve_cfg.obs_window, attn_impl=attn_impl)
+            mem_len=mem_len, obs_window=serve_cfg.obs_window,
+            attn_impl=attn_impl)
         new_tail.append(ns)
     new_state["tail"] = tuple(new_tail)
     h = rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
@@ -275,16 +305,18 @@ def prefill(params, gate_params, cfg, tokens, state, policy, serve_cfg, *,
 
 
 def _prefill_chunk_step(params, gate_params, cfg, tokens, state, policy,
-                        serve_cfg, memory, n_valid=None):
+                        serve_cfg, n_valid=None):
     """One chunk of the chunked-prefill pipeline: embed -> per-layer
     chunk attention + top-M eviction merge -> final norm. tokens: [B,C];
     n_valid: real-token count — None (= all C), scalar, or [B] for a
     ragged batch where each request marks its own tail (the padded tail
     positions are masked everywhere; rows with n_valid 0 are frozen
     bit-identically — see blocks.apply_block_prefill_chunk).
-    Returns (new_state, h_last [B,d] — each row's LAST REAL token's
-    hidden; rows with an empty chunk return garbage there, callers
-    carry the previous value — see prefill_chunk_loop)."""
+    Cross-attention memory (xk/xv + per-lane mem_len mask) is read
+    from the state — install it once with install_memory before the
+    first chunk. Returns (new_state, h_last [B,d] — each row's LAST
+    REAL token's hidden; rows with an empty chunk return garbage there,
+    callers carry the previous value — see prefill_chunk_loop)."""
     unit, U, R, tail = _unit_and_counts(cfg)
     h = jnp.take(params["embed"], tokens, axis=0)
     t0 = state["t"]
@@ -296,14 +328,9 @@ def _prefill_chunk_step(params, gate_params, cfg, tokens, state, policy,
         new_states = []
         for i, kind in enumerate(unit):
             g = ug[i] if ug is not None else None
-            st_i = st[i]
-            if kind == "cross" and memory is not None:
-                mem_kv = blocks.make_memory_kv(up[i]["xattn"], cfg, memory)
-                st_i = {"cache": st_i["cache"], "xk": mem_kv[0],
-                        "xv": mem_kv[1]}
             h, ns, _ = blocks.apply_block_prefill_chunk(
-                up[i], g, cfg, kind, h, st_i, t0, policy=policy,
-                obs_window=serve_cfg.obs_window, memory=memory,
+                up[i], g, cfg, kind, h, st[i], t0, policy=policy,
+                obs_window=serve_cfg.obs_window,
                 n_valid=n_valid, attn_impl=attn_impl)
             new_states.append(ns)
         return h, tuple(new_states)
@@ -321,15 +348,9 @@ def _prefill_chunk_step(params, gate_params, cfg, tokens, state, policy,
     new_tail = []
     for i, kind in enumerate(tail):
         g = (gate_params or {}).get("tail", (None,) * len(tail))[i]
-        st_i = state["tail"][i]
-        if kind == "cross" and memory is not None:
-            mem_kv = blocks.make_memory_kv(params["tail"][i]["xattn"], cfg,
-                                           memory)
-            st_i = {"cache": st_i["cache"], "xk": mem_kv[0],
-                    "xv": mem_kv[1]}
         h, ns, _ = blocks.apply_block_prefill_chunk(
-            params["tail"][i], g, cfg, kind, h, st_i, t0, policy=policy,
-            obs_window=serve_cfg.obs_window, memory=memory,
+            params["tail"][i], g, cfg, kind, h, state["tail"][i], t0,
+            policy=policy, obs_window=serve_cfg.obs_window,
             n_valid=n_valid, attn_impl=attn_impl)
         new_tail.append(ns)
     new_state["tail"] = tuple(new_tail)
@@ -346,18 +367,77 @@ def _prefill_chunk_step(params, gate_params, cfg, tokens, state, policy,
     return new_state, h_last
 
 
+def install_memory(params, cfg, state, memory, mem_len, lanes_mask=None):
+    """Write cross-attention memory K/V into every cross layer's state:
+    xk/xv from make_memory_kv(memory) and the per-lane valid length
+    mem_len ([B] int32 — slots >= mem_len are masked out of every
+    cross-attention read). memory: [B,S,d] d_model memory tokens
+    (vision projection / encoder output).
+
+    lanes_mask: optional [B] bool — install ONLY the masked lanes,
+    leaving every other lane's memory bit-identical (interleaved lane
+    admission writes a new request's memory into its reset lane while
+    neighbors keep decoding). With lanes_mask=None the whole batch is
+    replaced (fresh sub-state admission / one-shot prefill), and S may
+    differ from the state's slab width (the state adopts the new
+    shape); with a mask the shapes must match.
+
+    Done ONCE up front (not per chunk): the K/V projections of the
+    memory are loop-invariant, so the fused chunk scan no longer
+    recomputes them every chunk step."""
+    unit, U, R, tail = _unit_and_counts(cfg)
+    B = memory.shape[0]
+    ml = jnp.broadcast_to(jnp.asarray(mem_len, jnp.int32), (B,))
+
+    def upd(block_params, block_state, stacked: bool):
+        if stacked:
+            mem_kv = jax.vmap(
+                lambda pp: blocks.make_memory_kv(pp, cfg, memory))(
+                    block_params["xattn"])               # [R,B,S,Hkv,Dh]
+            ml_b = jnp.broadcast_to(ml, (mem_kv[0].shape[0], B))
+        else:
+            mem_kv = blocks.make_memory_kv(block_params["xattn"], cfg,
+                                           memory)
+            ml_b = ml
+        if lanes_mask is None:
+            return {"cache": block_state["cache"], "xk": mem_kv[0],
+                    "xv": mem_kv[1], "mem_len": ml_b}
+        sel = lanes_mask.reshape((1,) * stacked + (B, 1, 1, 1))
+        return {"cache": block_state["cache"],
+                "xk": jnp.where(sel, mem_kv[0], block_state["xk"]),
+                "xv": jnp.where(sel, mem_kv[1], block_state["xv"]),
+                "mem_len": jnp.where(
+                    lanes_mask.reshape((1,) * stacked + (B,)),
+                    ml_b, block_state["mem_len"])}
+
+    out = dict(state)
+    if R > 0 and "cross" in unit:
+        out["layers"] = tuple(
+            upd(params["layers"][i], state["layers"][i], True)
+            if kind == "cross" else state["layers"][i]
+            for i, kind in enumerate(unit))
+    out["tail"] = tuple(
+        upd(params["tail"][i], state["tail"][i], False)
+        if kind == "cross" else state["tail"][i]
+        for i, kind in enumerate(tail))
+    return out
+
+
 def prefill_chunk(params, gate_params, cfg, tokens, state, policy,
                   serve_cfg, *, n_valid=None, extra_inputs=None):
     """Continue prefill with a chunk of tokens [B,C] against existing
-    state (chunked-prefill setting, paper Sec B.3). First chunk must be
-    preceded by memory setup: for cross-attn families call prefill() on
-    the first chunk or pass extra_inputs here to (re)build memory K/V.
-    n_valid: number of real tokens (pad+mask tail chunks so every chunk
-    shares ONE closure shape regardless of the prompt length)."""
+    state (chunked-prefill setting, paper Sec B.3). For cross-attn
+    families the memory must be in the state before the first chunk:
+    pass extra_inputs here (install_memory runs first; idempotent) or
+    install it up front. n_valid: number of real tokens (pad+mask tail
+    chunks so every chunk shares ONE closure shape regardless of the
+    prompt length)."""
     extra_inputs = extra_inputs or {}
-    memory = _memory_from_inputs(params, cfg, extra_inputs)
+    memory, mem_len = _memory_from_inputs(params, cfg, extra_inputs)
+    if memory is not None:
+        state = install_memory(params, cfg, state, memory, mem_len)
     return _prefill_chunk_step(params, gate_params, cfg, tokens, state,
-                               policy, serve_cfg, memory, n_valid=n_valid)
+                               policy, serve_cfg, n_valid=n_valid)
 
 
 def prefill_chunk_loop(params, gate_params, cfg, chunks, n_valid, state,
@@ -378,9 +458,17 @@ def prefill_chunk_loop(params, gate_params, cfg, chunks, n_valid, state,
     each row's last real token — the ragged loop carries every row's
     h_last across its trailing empty chunks). Token-exact vs the eager
     per-chunk loop AND vs per-request unpadded prefill: all run
-    _prefill_chunk_step on identical padded inputs."""
+    _prefill_chunk_step on identical padded inputs.
+
+    Cross-memory families: extra_inputs carries the frontend embeds
+    (+ optional per-row "mem_len" for a ragged batch padded to a
+    shared S); the memory K/V are installed into the state ONCE before
+    the scan (install_memory) — they are loop-invariant, so the scan
+    body no longer rebuilds them per chunk."""
     extra_inputs = extra_inputs or {}
-    memory = _memory_from_inputs(params, cfg, extra_inputs)
+    memory, mem_len = _memory_from_inputs(params, cfg, extra_inputs)
+    if memory is not None:
+        state = install_memory(params, cfg, state, memory, mem_len)
     B = chunks.shape[1]
     dtype = params["embed"].dtype
     ragged = n_valid.ndim == 2
@@ -390,7 +478,7 @@ def prefill_chunk_loop(params, gate_params, cfg, chunks, n_valid, state,
         tokens, nv = xs
         state, h_last = _prefill_chunk_step(params, gate_params, cfg,
                                             tokens, state, policy,
-                                            serve_cfg, memory, n_valid=nv)
+                                            serve_cfg, n_valid=nv)
         if ragged:
             h_last = jnp.where((nv > 0)[:, None], h_last, h_prev)
         return (state, h_last), None
@@ -566,7 +654,8 @@ def decode_segment_loop(params, gate_params, cfg, state, tok, keys, active,
 def mixed_step_loop(params, gate_params, cfg, state, tok, keys, active,
                     n_emitted, max_new, eos_id, chunks, chunk_valid,
                     finish, new_keys, policy, serve_cfg, *, greedy=True,
-                    temperature=0.0, attn_impl="xla"):
+                    temperature=0.0, attn_impl="xla", mem_inputs=None,
+                    mem_install=None):
     """Interleaved prefill/decode segment (the PR-4 SLO hot path): ONE
     lax.scan whose every step advances the active DECODE lanes by one
     token AND feeds at most one prefill chunk per ADMITTING lane — so a
@@ -606,7 +695,20 @@ def mixed_step_loop(params, gate_params, cfg, state, tok, keys, active,
     key for every lane that finishes prefill within this segment).
     Other operands as decode_segment_loop. Returns the same tuple:
     (state, tok, keys, active, n_emitted, ids [B, n_steps],
-    emitted [B, n_steps])."""
+    emitted [B, n_steps]).
+
+    Cross-memory families: mem_inputs (the extra_inputs dict, padded
+    [B,S,feat] + per-lane "mem_len") and mem_install ([B] bool: lanes
+    whose FIRST prompt chunk rides in this segment) install each
+    admitting lane's encoder/vision memory into its (reset) lane state
+    BEFORE the scan — memory is chunk-invariant, the install is a
+    per-lane where (neighbors bit-identical), and it still costs zero
+    dedicated dispatches: it rides inside the segment program."""
+    if mem_inputs is not None:
+        memory, mem_len = _memory_from_inputs(params, cfg, mem_inputs)
+        state = install_memory(params, cfg, state, memory, mem_len,
+                               lanes_mask=mem_install)
+
     def body(carry, xs):
         state, tok, keys, active, n_emitted = carry
         ctoks, nv, fin = xs
@@ -626,7 +728,7 @@ def mixed_step_loop(params, gate_params, cfg, state, tok, keys, active,
         # --- prefill sub-step (zero-valid rows frozen bit-identically)
         state, h_last = _prefill_chunk_step(params, gate_params, cfg,
                                             ctoks, state, policy,
-                                            serve_cfg, None, n_valid=nv)
+                                            serve_cfg, n_valid=nv)
         # --- transition: finishing lanes take their greedy first token
         # (one-shot parity: Engine.generate argmaxes the prefill
         # logits even under temperature sampling) and their request's
@@ -654,21 +756,26 @@ def mixed_step_loop(params, gate_params, cfg, state, tok, keys, active,
 
 
 # reset targets per leaf name: slot metadata is invalidated (pos -1
-# makes a slot invisible everywhere), recurrences and clocks zero; K/V
-# and cross-memory bytes are left in place — unreadable once pos < 0,
-# and fully overwritten by the next insert_lanes anyway. The cache
-# fills must match core.cache.reset_lanes (the per-cache primitive;
-# parity asserted in tests/test_scheduler.py).
-_LANE_RESET = {"pos": -1, "beta": 1.0, "aux": 0.0, "h": 0.0, "conv": 0.0}
+# makes a slot invisible everywhere; mem_len 0 likewise makes the
+# cross-memory slab unreadable), recurrences and clocks zero; K/V and
+# cross-memory BYTES are left in place — invisible to every attention
+# read once their metadata is cleared, and fully overwritten by the
+# next insert_lanes / install_memory anyway. The cache fills must
+# match core.cache.reset_lanes (the per-cache primitive; parity
+# asserted in tests/test_scheduler.py).
+_LANE_RESET = {"pos": -1, "beta": 1.0, "aux": 0.0, "h": 0.0, "conv": 0.0,
+               "mem_len": 0}
 
 
 def reset_lanes(state, lane_mask):
     """Retire lanes: clear the masked lanes' cache metadata (pos := -1,
-    beta := 1, aux := 0), recurrent/SSM state and clock WITHOUT touching
-    any other lane — in the slot-dense layout a lane reset is O(M)
-    metadata writes, no paged block tables to walk. lane_mask: [B]
-    bool. Neighbor lanes come back bit-identical (asserted by
-    tests/test_scheduler.py)."""
+    beta := 1, aux := 0), cross-memory validity (mem_len := 0 — the
+    retired lane's encoder/vision K/V bytes become unreadable, so the
+    next occupant can never attend a predecessor's memory),
+    recurrent/SSM state and clock WITHOUT touching any other lane — in
+    the slot-dense layout a lane reset is O(M) metadata writes, no
+    paged block tables to walk. lane_mask: [B] bool. Neighbor lanes
+    come back bit-identical (asserted by tests/test_scheduler.py)."""
     def reset(axis):
         def f(path, leaf):
             name = next((p.key for p in reversed(path)

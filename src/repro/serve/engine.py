@@ -106,56 +106,128 @@ class Engine:
         self._tf_loop = jax.jit(_tf_loop, donate_argnums=(0,))
         self._lane_closures = {}
 
+    @property
+    def mem_key(self) -> Optional[str]:
+        """extra_inputs key carrying the cross-attention memory for
+        this family (None for families without one)."""
+        return {"vlm": "vision_embeds",
+                "encdec": "source_embeds"}.get(self.cfg.family)
+
+    @property
+    def mem_shape(self):
+        """(S, feat) of one request's full-length memory slab — the
+        shared shape the scheduler pads ragged per-request memory to
+        (per-lane mem_len marks each request's valid prefix)."""
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            return cfg.num_image_tokens, cfg.vision_dim
+        if cfg.family == "encdec":
+            return cfg.source_len, cfg.d_model
+        return None
+
     def lane_closures(self, greedy: bool):
         """Jitted continuous-batching closures (serve.scheduler), built
         lazily and CACHED PER ENGINE so every Scheduler constructed on
         this engine shares one set of compilations: ragged admission
         prefill(+first token), lane scatter, masked decode segment, lane
         reset. Keyed by the greedy flag (the segment closure bakes the
-        sampling mode in)."""
+        sampling mode in). For cross-memory families (vlm/encdec) the
+        admit/mixed closures take extra operands: the padded per-lane
+        memory slab [B, S, feat] and its valid lengths mem_len [B]."""
         greedy = bool(greedy)
         if greedy in self._lane_closures:
             return self._lane_closures[greedy]
         params, gates, cfg = self.params, self.gates, self.cfg
         serve, policy, impl = self.serve, self.policy, self.serve.attn_impl
+        mem_key = self.mem_key
 
-        def _admit(state, tok, keys, chunks, n_valid, new_keys, lanes):
+        def _admit_core(state, tok, keys, chunks, n_valid, new_keys,
+                        lanes, extra):
             # the WHOLE admission is one program: fresh sub-state +
-            # ragged prefill + first tokens + lane scatter — one
-            # dispatch per admission round however many requests and
-            # chunks it packs
+            # (cross-memory install +) ragged prefill + first tokens +
+            # lane scatter — one dispatch per admission round however
+            # many requests and chunks it packs
             k = chunks.shape[1]
             sub = T.init_decode_state(cfg, k, serve.budget)
             sub, h_last = T.prefill_chunk_loop(
-                params, gates, cfg, chunks, n_valid, sub, policy, serve)
+                params, gates, cfg, chunks, n_valid, sub, policy, serve,
+                extra_inputs=extra)
             logits = T.compute_logits(params, cfg, h_last)
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             state = T.insert_lanes(state, sub, lanes)
             return (state, tok.at[lanes].set(first),
                     keys.at[lanes].set(new_keys))
 
-        def _segment(state, tok, keys, active, n_emitted, max_new, eos):
+        def _segment(state, tok, keys, active, n_emitted, max_new, eos,
+                     n_steps):
+            # n_steps is static: the scheduler runs full segments AND
+            # the pure-decode remainder of a drained interleaved
+            # segment through the same closure (one compile per
+            # distinct length, bounded by decode_segment)
             return T.decode_segment_loop(
                 params, gates, cfg, state, tok, keys, active, n_emitted,
-                max_new, eos, serve.decode_segment, policy, greedy=greedy,
+                max_new, eos, n_steps, policy, greedy=greedy,
                 temperature=serve.temperature, attn_impl=impl)
 
-        def _mixed(state, tok, keys, active, n_emitted, max_new, eos,
-                   chunks, chunk_valid, finish, new_keys):
+        def _mixed_core(state, tok, keys, active, n_emitted, max_new,
+                        eos, chunks, chunk_valid, finish, new_keys,
+                        mem_inputs, mem_install):
             # interleaved prefill/decode segment (SLO scheduling): the
-            # admission prefill rides INSIDE the decode segment, one
-            # chunk per admitting lane per step — one dispatch covers
-            # both, so admission never pauses in-flight decodes
+            # admission prefill — cross-memory install included — rides
+            # INSIDE the decode segment, one chunk per admitting lane
+            # per step — one dispatch covers both, so admission never
+            # pauses in-flight decodes
             return T.mixed_step_loop(
                 params, gates, cfg, state, tok, keys, active, n_emitted,
                 max_new, eos, chunks, chunk_valid, finish, new_keys,
                 policy, serve, greedy=greedy,
-                temperature=serve.temperature, attn_impl=impl)
+                temperature=serve.temperature, attn_impl=impl,
+                mem_inputs=mem_inputs, mem_install=mem_install)
 
+        def _mixed_plain(state, tok, keys, active, n_emitted, max_new,
+                         eos, chunks, chunk_valid, finish, new_keys):
+            # mixed segment WITHOUT memory operands — the only mixed
+            # closure for self-attention families, and the no-install
+            # fast path for cross families (segments where no lane's
+            # first chunk rides: skips re-running the encoder/vision
+            # projection over the slab just to where-keep old state)
+            return _mixed_core(state, tok, keys, active, n_emitted,
+                               max_new, eos, chunks, chunk_valid,
+                               finish, new_keys, None, None)
+
+        if mem_key is None:
+            def _admit(state, tok, keys, chunks, n_valid, new_keys,
+                       lanes):
+                return _admit_core(state, tok, keys, chunks, n_valid,
+                                   new_keys, lanes, None)
+
+            _mixed = _mixed_plain
+        else:
+            def _admit(state, tok, keys, chunks, n_valid, new_keys,
+                       lanes, mem, mem_len):
+                return _admit_core(state, tok, keys, chunks, n_valid,
+                                   new_keys, lanes,
+                                   {mem_key: mem, "mem_len": mem_len})
+
+            def _mixed(state, tok, keys, active, n_emitted, max_new,
+                       eos, chunks, chunk_valid, finish, new_keys, mem,
+                       mem_len, install):
+                return _mixed_core(state, tok, keys, active, n_emitted,
+                                   max_new, eos, chunks, chunk_valid,
+                                   finish, new_keys,
+                                   {mem_key: mem, "mem_len": mem_len},
+                                   install)
+
+        mixed_jit = jax.jit(_mixed, donate_argnums=(0,))
         closures = {
             "admit": jax.jit(_admit, donate_argnums=(0,)),
-            "segment": jax.jit(_segment, donate_argnums=(0,)),
-            "mixed": jax.jit(_mixed, donate_argnums=(0,)),
+            "segment": jax.jit(_segment, static_argnums=(7,),
+                               donate_argnums=(0,)),
+            "mixed": mixed_jit,
+            # same jit object for non-cross families: _mixed IS the
+            # plain closure there, so no second compilation cache
+            "mixed_nomem": (mixed_jit if mem_key is None else
+                            jax.jit(_mixed_plain, donate_argnums=(0,))),
             "reset": jax.jit(T.reset_lanes, donate_argnums=(0,)),
         }
         self._lane_closures[greedy] = closures
@@ -209,7 +281,9 @@ class Engine:
             return self._prefill_chunk_loop(chunks, jnp.asarray(n_valid),
                                             state, extra)
         h_last = None
-        # first chunk builds cross-attn memory; later chunks reuse it
+        # extra is passed per chunk: install_memory re-writes the same
+        # cross-attn memory K/V each call (idempotent), keeping the
+        # eager loop bit-identical to the fused scan's one-time install
         for i in range(n_chunks):
             self.dispatch_count += 1
             state, h_last = self._prefill_chunk(

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -51,7 +51,14 @@ class Request:
     priority: admission class, higher wins under sched_policy="priority"
     (ties FIFO). deadline_ms: optional latency SLO relative to submit;
     sched_policy="edf" admits by earliest absolute deadline and the
-    preemptor may evict a later-deadline lane for an earlier one."""
+    preemptor may evict a later-deadline lane for an earlier one.
+
+    extra_inputs: per-request cross-attention memory for the
+    vlm/encdec families — {"vision_embeds": [S, vision_dim]} or
+    {"source_embeds": [S, d_model]} float32, UNBATCHED, any S between 1
+    and the family's memory length (ragged memory: the scheduler packs
+    mixed lengths into one padded slab with a per-lane mem_len mask).
+    Required by the scheduler for those families, ignored otherwise."""
     rid: int
     prompt: np.ndarray
     max_new: int
@@ -60,6 +67,7 @@ class Request:
     arrival: float = 0.0
     priority: int = 0
     deadline_ms: Optional[float] = None
+    extra_inputs: Optional[Dict[str, np.ndarray]] = None
 
     def __post_init__(self):
         prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -71,6 +79,17 @@ class Request:
             raise ValueError(f"request {self.rid}: deadline_ms must be "
                              f"positive (or None for no deadline)")
         object.__setattr__(self, "prompt", prompt)
+        if self.extra_inputs is not None:
+            extra = {}
+            for k, v in self.extra_inputs.items():
+                v = np.asarray(v, np.float32)
+                if v.ndim != 2 or v.shape[0] < 1:
+                    raise ValueError(
+                        f"request {self.rid}: extra_inputs[{k!r}] must "
+                        f"be a [S>=1, feat] array (unbatched), got "
+                        f"shape {v.shape}")
+                extra[k] = v
+            object.__setattr__(self, "extra_inputs", extra)
 
     @property
     def prompt_len(self) -> int:
@@ -87,7 +106,15 @@ class RequestState:
     submit_seq: int = 0                 # FIFO tie-break order
     submit_sec: float = 0.0             # when the scheduler accepted it
     admit_sec: Optional[float] = None   # when it won a lane (prefill)
-    first_token_sec: Optional[float] = None  # first emission harvested
+    # first_token_sec is derived from the first emission's STEP inside
+    # its segment (linear interpolation over the segment wall time),
+    # not the segment-harvest wall clock — a large decode_segment no
+    # longer quantizes TTFT up by the whole segment width.
+    first_token_sec: Optional[float] = None
+    first_emit_step: Optional[int] = None  # global scheduler step index
+    #                                        of the first emission
+    #                                        (deterministic, unlike the
+    #                                        wall-clock timestamps)
     finish_sec: Optional[float] = None  # when it retired
     n_preempts: int = 0                 # times evicted mid-flight and
     #                                     re-queued (restart-from-scratch

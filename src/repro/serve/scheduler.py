@@ -36,14 +36,24 @@ n_prefill_rounds at 0 because admission rides inside the segments
 (tests/test_scheduler.py asserts the exact formula under churn and
 mixed traffic).
 
+Cross-memory families (vlm / encdec, PR 5): each request carries its
+own vision/encoder memory in `Request.extra_inputs` (ragged lengths).
+Admission packs an admission round's memories into ONE padded
+[B, S, feat] slab + per-lane mem_len and installs it with the prompt
+prefill (phased: inside the same admission dispatch; interleaved:
+inside the segment program — still zero dedicated dispatches), and
+lane retirement invalidates it (T.reset_lanes: mem_len := 0), so a
+recycled lane can never attend a previous occupant's memory.
+
 Correctness contract: each request's output is token-identical to a
 one-shot `Engine.generate(prompt[None], max_new, chunked=True,
-seed=seed)` (truncated at its eos), for every eviction policy, both
-attention impls, both admission modes, any admission order and under
-preemption — lanes are frozen bit-identically while inactive, each
-lane's RNG chain is seeded from its request alone, and both the ragged
-phased prefill and the per-lane interleaved chunk schedule replay the
-exact chunk sequence one-shot chunked prefill runs.
+seed=seed)` (truncated at its eos; cross families with the request's
+own unpadded memory), for every eviction policy, both attention
+impls, both admission modes, any admission order and under preemption
+— lanes are frozen bit-identically while inactive, each lane's RNG
+chain is seeded from its request alone, and both the ragged phased
+prefill and the per-lane interleaved chunk schedule replay the exact
+chunk sequence one-shot chunked prefill runs.
 
 `continuous=False` degrades the SAME machinery to static batching
 (admission waits until every lane is free, finished lanes idle until
@@ -116,11 +126,6 @@ class Scheduler:
     def __init__(self, engine: Engine, n_lanes: int, *, greedy: bool = True,
                  continuous: bool = True,
                  interleaved: Optional[bool] = None):
-        if engine.cfg.family in ("vlm", "encdec"):
-            raise ValueError(
-                "continuous batching does not yet plumb per-request "
-                "cross-attention memory; serve these families through "
-                "the one-shot Engine")
         self.eng = engine
         self.cfg, self.serve = engine.cfg, engine.serve
         self.policy = engine.policy
@@ -134,6 +139,13 @@ class Scheduler:
                              f"{self.sched_policy!r}; "
                              f"expected one of {SCHED_POLICIES}")
         self.greedy = greedy or self.serve.temperature == 0.0
+        # cross-memory families (vlm/encdec): per-request encoder/vision
+        # memory is a first-class per-lane resource — admission packs
+        # ragged memories into one padded [B, S, feat] slab with
+        # per-lane mem_len, the closures install it alongside the
+        # prompt prefill, and reset_lanes invalidates it (mem_len := 0)
+        self.mem_key = engine.mem_key
+        self.mem_shape = engine.mem_shape
         # jitted closures live on the Engine (cached per greedy flag) so
         # successive schedulers — e.g. benchmark warm-up then measured
         # run — share one set of compilations
@@ -141,6 +153,7 @@ class Scheduler:
         self._admit_fn = closures["admit"]
         self._segment = closures["segment"]
         self._mixed = closures["mixed"]
+        self._mixed_nomem = closures["mixed_nomem"]
         self._reset = closures["reset"]
 
         # device lane state
@@ -167,6 +180,13 @@ class Scheduler:
         self.n_segments = 0
         self.n_resets = 0
         self.n_preempted = 0
+        # interleaved segments whose prefill drained mid-segment and
+        # were split into a mixed part + a pure-decode remainder (each
+        # half is its own dispatch and counts in n_segments)
+        self.n_segment_splits = 0
+        # global decode-step clock: total scan steps run so far, the
+        # basis of the deterministic RequestState.first_emit_step
+        self._steps_done = 0
         self._t0 = time.monotonic()
 
     # ---------------------------------------------------------- queueing
@@ -174,10 +194,36 @@ class Scheduler:
     def _now(self) -> float:
         return time.monotonic() - self._t0
 
+    def _check_memory(self, request: Request) -> None:
+        """Cross-memory families: every request must carry its own
+        memory (vision embeds / source frames), at most the family's
+        slab length — malformed requests fail at submit, not inside a
+        jitted admission program."""
+        if self.mem_key is None:
+            return
+        S, feat = self.mem_shape
+        extra = request.extra_inputs or {}
+        mem = extra.get(self.mem_key)
+        if mem is None:
+            raise ValueError(
+                f"request {request.rid}: family {self.cfg.family!r} "
+                f"requires extra_inputs[{self.mem_key!r}]")
+        if mem.shape[1] != feat:
+            raise ValueError(
+                f"request {request.rid}: extra_inputs[{self.mem_key!r}] "
+                f"feature dim {mem.shape[1]} != {feat} (family slab "
+                f"[{S}, {feat}])")
+        if mem.shape[0] > S:
+            raise ValueError(
+                f"request {request.rid}: extra_inputs[{self.mem_key!r}] "
+                f"length {mem.shape[0]} exceeds the family slab "
+                f"[{S}, {feat}]")
+
     def submit(self, request: Request) -> bool:
         """Accept a request into the waiting queue. Returns False (the
         request is REJECTED) when serve_cfg.max_queue requests are
         already waiting — the admission-control backpressure."""
+        self._check_memory(request)
         if len(self.queue) >= self.serve.max_queue:
             return False
         rs = RequestState(request=request, submit_seq=self._submit_seq,
@@ -265,6 +311,7 @@ class Scheduler:
             rs = self.lane_req[lane]
             rs.status, rs.lane = Status.QUEUED, -1
             rs.admit_sec = rs.first_token_sec = None
+            rs.first_emit_step = None
             rs.tokens.clear()
             rs.n_preempts += 1
             self.n_preempted += 1
@@ -295,6 +342,21 @@ class Scheduler:
             n_valid[: nv.shape[0], i] = nv
         return jnp.asarray(chunks), jnp.asarray(n_valid)
 
+    def _pack_memory(self, slots: Dict[int, RequestState]):
+        """Pack per-request cross memory into one padded slab:
+        mem [n_lanes, S, feat] f32 + mem_len [n_lanes] int32 (rows not
+        in `slots` — free lanes / admission-pad rows — stay all-zero
+        with mem_len 0, which masks them out of every cross-attention
+        read). slots maps row index -> RequestState."""
+        S, feat = self.mem_shape
+        mem = np.zeros((self.n_lanes, S, feat), np.float32)
+        mem_len = np.zeros((self.n_lanes,), np.int32)
+        for row, rs in slots.items():
+            m = rs.request.extra_inputs[self.mem_key]
+            mem[row, : m.shape[0]] = m
+            mem_len[row] = m.shape[0]
+        return jnp.asarray(mem), jnp.asarray(mem_len)
+
     def _claim_lanes(self) -> List[int]:
         """Common admission gate: which free lanes can be filled now
         (static batching waits for the full drain)."""
@@ -322,9 +384,13 @@ class Scheduler:
         seeds = [rs.request.seed for rs in batch] + [0] * (self.n_lanes - k)
         self.eng.dispatch_count += 1
         self.n_prefill_rounds += 1
-        self.state, self.tok, self.keys = self._admit_fn(
-            self.state, self.tok, self.keys, chunks, n_valid,
-            jnp.asarray(_prng_keys(seeds)), jnp.asarray(lane_idx))
+        args = (self.state, self.tok, self.keys, chunks, n_valid,
+                jnp.asarray(_prng_keys(seeds)), jnp.asarray(lane_idx))
+        if self.mem_key is not None:
+            # sub-state row i holds batch[i]; its memory rides the same
+            # rows and is installed inside the same single dispatch
+            args += self._pack_memory(dict(enumerate(batch)))
+        self.state, self.tok, self.keys = self._admit_fn(*args)
         now = self._now()
         for rs, lane in zip(batch, lanes):
             rs.status, rs.lane, rs.admit_sec = Status.RUNNING, lane, now
@@ -371,19 +437,25 @@ class Scheduler:
         tokens per segment (0 = unlimited; the first chunk of a segment
         always proceeds so admission can never starve). Returns device
         operands (chunks, n_valid, finish), the RNG keys for lanes
-        finishing within this segment, and the per-lane chunk counts to
-        commit after the dispatch."""
+        finishing within this segment, the per-lane chunk counts to
+        commit after the dispatch, the per-lane install mask (lanes
+        whose FIRST prompt chunk — global chunk index 0 — rides in this
+        segment: their cross memory must be installed before the scan),
+        and the DRAIN step: the first step index with no chunk left —
+        the segment is split there into mixed + pure-decode dispatches
+        so drained steps never pay the chunk sub-step."""
         C = self.serve.prefill_chunk
         B = self.n_lanes
         chunks = np.zeros((n_steps, B, C), np.int32)
         nv = np.zeros((n_steps, B), np.int32)
         finish = np.zeros((n_steps, B), bool)
         new_keys = np.zeros((B, 2), np.uint32)
+        install = np.zeros((B,), bool)
         budget = self.serve.prefill_budget
         lanes = [l for l in range(B) if self.lane_prefill[l] is not None]
         lanes.sort(key=lambda l: self._order_key(self.lane_req[l]))
         progress = {l: self.lane_prefill[l].next_chunk for l in lanes}
-        spent = 0
+        spent, drain = 0, 0
         for j in range(n_steps):
             for lane in lanes:
                 pf = self.lane_prefill[lane]
@@ -395,50 +467,98 @@ class Scheduler:
                     continue
                 chunks[j, lane] = pf.chunks[i]
                 nv[j, lane] = tok_count
+                if i == 0:
+                    install[lane] = True
                 if i == pf.n_chunks - 1:
                     finish[j, lane] = True
                     new_keys[lane] = _prng_keys(
                         [self.lane_req[lane].request.seed])[0]
                 progress[lane] = i + 1
                 spent += tok_count
+                drain = j + 1
         scheduled = {l: progress[l] - self.lane_prefill[l].next_chunk
                      for l in lanes}
-        return chunks, nv, finish, new_keys, scheduled
+        return chunks, nv, finish, new_keys, scheduled, install, drain
 
-    def _run_segment(self) -> List[RequestState]:
-        """One fused segment over all lanes — plain decode, or the
-        mixed prefill/decode program when any lane is still prefilling
-        (interleaved admission). Harvest emissions, retire lanes that
-        finished inside the segment."""
-        n_steps = self.serve.decode_segment
-        prefilling = any(pf is not None for pf in self.lane_prefill)
+    def _dispatch_mixed(self, chunks, nv, finish, new_keys, scheduled,
+                        install):
+        """One mixed prefill/decode dispatch running the prebuilt
+        schedule (chunks [d, B, C] — already sliced to the drain
+        boundary); commits the host-side chunk progress it carries.
+        Returns the per-step (ids, emitted) rows. Cross families route
+        through the memory-installing closure only when some lane's
+        FIRST chunk rides in this dispatch — otherwise the plain
+        closure skips re-running the encoder/vision projection."""
         self.eng.dispatch_count += 1
         self.n_segments += 1
-        if prefilling:
-            chunks, nv, finish, new_keys, scheduled = \
-                self._build_prefill_schedule(n_steps)
-            (self.state, self.tok, self.keys, active_d, n_emitted_d, ids,
-             emitted) = self._mixed(
-                self.state, self.tok, self.keys, jnp.asarray(self.active),
+        args = (self.state, self.tok, self.keys, jnp.asarray(self.active),
                 jnp.asarray(self.n_emitted), jnp.asarray(self.max_new),
                 jnp.asarray(self.eos), jnp.asarray(chunks),
                 jnp.asarray(nv), jnp.asarray(finish),
                 jnp.asarray(new_keys))
-            for lane, n in scheduled.items():
-                pf = self.lane_prefill[lane]
-                pf.next_chunk += n
-                if pf.done:
-                    self.lane_prefill[lane] = None   # decoding now
-        else:
-            (self.state, self.tok, self.keys, active_d, n_emitted_d, ids,
-             emitted) = self._segment(
-                self.state, self.tok, self.keys, jnp.asarray(self.active),
-                jnp.asarray(self.n_emitted), jnp.asarray(self.max_new),
-                jnp.asarray(self.eos))
-        ids, emitted = np.asarray(ids), np.asarray(emitted)
+        mixed_fn = self._mixed_nomem
+        if self.mem_key is not None and install.any():
+            mem, mem_len = self._pack_memory(
+                {l: self.lane_req[l] for l in range(self.n_lanes)
+                 if install[l]})
+            args += (mem, mem_len, jnp.asarray(install))
+            mixed_fn = self._mixed
+        (self.state, self.tok, self.keys, active_d, n_emitted_d, ids,
+         emitted) = mixed_fn(*args)
+        for lane, n in scheduled.items():
+            pf = self.lane_prefill[lane]
+            pf.next_chunk += n
+            if pf.done:
+                self.lane_prefill[lane] = None       # decoding now
+        self.active = np.array(active_d)
+        self.n_emitted = np.array(n_emitted_d)
+        return np.asarray(ids), np.asarray(emitted)
+
+    def _dispatch_decode(self, n_steps: int):
+        """One pure-decode dispatch of n_steps steps (a full segment,
+        or the drained remainder of a split interleaved segment)."""
+        self.eng.dispatch_count += 1
+        self.n_segments += 1
+        (self.state, self.tok, self.keys, active_d, n_emitted_d, ids,
+         emitted) = self._segment(
+            self.state, self.tok, self.keys, jnp.asarray(self.active),
+            jnp.asarray(self.n_emitted), jnp.asarray(self.max_new),
+            jnp.asarray(self.eos), n_steps)
         # np.array (copy): asarray views of device buffers are read-only
         self.active = np.array(active_d)
         self.n_emitted = np.array(n_emitted_d)
+        return np.asarray(ids), np.asarray(emitted)
+
+    def _run_segment(self) -> List[RequestState]:
+        """One logical segment (serve.decode_segment steps) over all
+        lanes — plain decode, or, while any lane is still prefilling
+        (interleaved admission), the mixed prefill/decode program SPLIT
+        at the drain boundary: mixed steps only while prompt chunks
+        remain, the pure-decode closure for the rest. The split keeps
+        dispatches O(segments) (each half counts in n_segments) and
+        stops drained steps from paying the per-step chunk sub-step.
+        Harvest emissions, retire lanes that finished inside the
+        segment; TTFT derives from each lane's first-emission STEP
+        (interpolated over the segment wall time), not the harvest
+        timestamp."""
+        n_steps = self.serve.decode_segment
+        prefilling = any(pf is not None for pf in self.lane_prefill)
+        t_seg0 = self._now()
+        if prefilling:
+            chunks, nv, finish, new_keys, scheduled, install, drain = \
+                self._build_prefill_schedule(n_steps)
+            # every scheduled chunk lies before `drain`, so slicing the
+            # grids to [:drain] dispatches exactly the built schedule
+            ids, emitted = self._dispatch_mixed(
+                chunks[:drain], nv[:drain], finish[:drain], new_keys,
+                scheduled, install)
+            if drain < n_steps:
+                self.n_segment_splits += 1
+                ids2, emitted2 = self._dispatch_decode(n_steps - drain)
+                ids = np.concatenate([ids, ids2], axis=1)
+                emitted = np.concatenate([emitted, emitted2], axis=1)
+        else:
+            ids, emitted = self._dispatch_decode(n_steps)
         finished, retired_lanes, now = [], [], self._now()
         for lane in range(self.n_lanes):
             rs = self.lane_req[lane]
@@ -446,13 +566,20 @@ class Scheduler:
                 continue
             new_toks = ids[lane][emitted[lane]]
             if new_toks.size and not rs.tokens:
-                rs.first_token_sec = now
+                # first emission: stamp the within-segment step it
+                # happened at, and interpolate its wall time across the
+                # segment — decode_segment no longer quantizes TTFT up
+                j0 = int(np.argmax(emitted[lane]))
+                rs.first_emit_step = self._steps_done + j0
+                rs.first_token_sec = t_seg0 + (now - t_seg0) * \
+                    (j0 + 1) / n_steps
             rs.tokens.extend(int(x) for x in new_toks)
             if not self.active[lane] and self.lane_prefill[lane] is None:
                 rs.status, rs.finish_sec, rs.lane = Status.DONE, now, -1
                 self.lane_req[lane] = None
                 finished.append(rs)
                 retired_lanes.append(lane)
+        self._steps_done += n_steps
         if retired_lanes:
             # one vectorized reset for every lane retired this segment
             mask = np.zeros(self.n_lanes, bool)

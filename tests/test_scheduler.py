@@ -297,7 +297,9 @@ def test_dispatches_interleaved_zero_prefill_rounds(tiny):
     """Interleaved admission folds the prefill into the segment
     programs: the formula still holds with n_prefill_rounds pinned at
     ZERO under mixed traffic (long + short prompts churning over
-    B < N lanes), and dispatches stay O(segments)."""
+    B < N lanes), and dispatches stay O(segments) — n_segments counts
+    every segment-program dispatch, including BOTH halves of a segment
+    split at the prefill drain boundary."""
     cfg, params, gates = tiny
     reqs = _requests([21, 5, 19, 8, 14], [4, 8, 4, 8, 4])
     eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
@@ -306,6 +308,75 @@ def test_dispatches_interleaved_zero_prefill_rounds(tiny):
     sched.run(reqs)
     assert sched.n_prefill_rounds == 0
     assert eng.dispatch_count == sched.n_segments + sched.n_resets
+
+
+def test_interleaved_segment_splits_at_drain(tiny):
+    """A short prompt (1 chunk) admitted into a wide segment drains on
+    step 1: the scheduler must split the segment — mixed steps only
+    while chunks remain, the pure-decode closure for the remainder —
+    instead of running the chunk sub-step for all decode_segment steps.
+    Splits are counted, each half is a dispatch (formula still exact),
+    and outputs stay token-identical to one-shot."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=8)
+    reqs = _requests([5, 6], [12, 9])          # 1-chunk prompts, long
+    #                                            decodes: drain << seg
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=8, **serve)
+    sched = Scheduler(eng, n_lanes=2, interleaved=True)
+    res = sched.run(reqs)
+    assert sched.n_segment_splits > 0
+    assert sched.n_prefill_rounds == 0
+    assert eng.dispatch_count == sched.n_segments + sched.n_resets
+    # a split adds exactly one extra segment dispatch per occurrence
+    assert sched.n_segments > sched.n_segment_splits
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy="trimkv", **serve)
+        np.testing.assert_array_equal(res[r.rid].ids, want)
+
+
+def test_ttft_not_quantized_by_segment_width(tiny):
+    """TTFT regression (PR 5): first_token_sec derives from the first
+    emission's STEP inside the segment (interpolated over the segment
+    wall time), not the segment-harvest timestamp. The deterministic
+    invariant: the global first-emission step index is independent of
+    decode_segment — previously a wide segment pushed the whole TTFT to
+    its harvest, quantizing it up by as much as decode_segment steps."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=8)
+    req = _requests([9], [32])[0]
+    steps = {}
+    for seg in (1, 32):
+        eng = build_engine(cfg, params, gates, policy="trimkv",
+                           decode_segment=seg, **serve)
+        Scheduler(eng, n_lanes=1).run([req])       # warm-up: compile
+        res = Scheduler(eng, n_lanes=1).run([req])
+        rs = res[req.rid]
+        assert rs.first_emit_step is not None
+        steps[seg] = rs.first_emit_step
+        if seg == 32:
+            # whole generation inside ONE segment: the first token
+            # lands on step 0 of 32, so TTFT must sit well below the
+            # request latency instead of coinciding with its harvest
+            assert rs.ttft_sec < 0.9 * rs.latency_sec
+        assert rs.first_token_sec <= rs.finish_sec
+    # phased admission emits the first token at segment step 0 in both
+    assert steps[1] == steps[32] == 0
+
+
+def test_first_emit_step_interleaved_counts_prefill_steps(tiny):
+    """Interleaved admission: a 3-chunk prompt occupies the first 3
+    scan steps, so the first emission lands on global step 3 — for any
+    segment width (the step clock spans split segments too)."""
+    cfg, params, gates = tiny
+    req = _requests([21], [6])[0]               # 3 chunks of 8
+    steps = set()
+    for seg in (2, 8):
+        eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                           prefill_chunk=8, decode_segment=seg)
+        res = Scheduler(eng, n_lanes=1, interleaved=True).run([req])
+        steps.add(res[req.rid].first_emit_step)
+    assert steps == {3}
 
 
 def test_queue_backpressure(tiny):
@@ -382,6 +453,35 @@ def test_preempted_request_matches_uninterrupted(tiny, interleaved):
                                   sched.n_segments + sched.n_resets)
 
 
+def test_preempt_mid_prefill_lane_matches_uninterrupted(tiny):
+    """A lane still PREFILLING (lane_prefill[lane] is not None — its
+    prompt chunks only partially consumed) is evicted by a
+    higher-priority arrival: the victim is re-queued mid-prefill, its
+    lane (partial cache included) recycled, and on re-admission it
+    restarts from chunk 0 — so its final output is still
+    token-identical to an uninterrupted one-shot run."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=8)
+    reqs = _requests([37, 7], [5, 4], priority=[0, 3])   # 5-chunk prompt
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=2, sched_policy="priority",
+                       prefill_budget=8, **serve)
+    sched = Scheduler(eng, n_lanes=1, interleaved=True)
+    sched.submit(reqs[0])
+    sched.step()                        # 1 budgeted chunk of 5 consumed
+    assert sched.lane_prefill[0] is not None     # mid-prefill, not done
+    assert not sched.active[0]                   # not decoding yet
+    sched.submit(reqs[1])
+    res = sched.run()
+    assert res[0].n_preempts >= 1
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy="trimkv", **serve)
+        np.testing.assert_array_equal(res[r.rid].ids, want,
+                                      err_msg=f"rid={r.rid}")
+    assert eng.dispatch_count == (sched.n_prefill_rounds +
+                                  sched.n_segments + sched.n_resets)
+
+
 def test_prefill_budget_schedule_and_parity(tiny):
     """serve_cfg.prefill_budget caps prompt tokens per interleaved
     segment (first chunk exempt so admission can never starve), and a
@@ -395,10 +495,14 @@ def test_prefill_budget_schedule_and_parity(tiny):
     for r in reqs:
         sched.submit(r)
     sched._admit_interleaved()
-    chunks, nv, finish, _, scheduled = sched._build_prefill_schedule(4)
+    chunks, nv, finish, _, scheduled, install, drain = \
+        sched._build_prefill_schedule(4)
     # 8-token budget with 8-token chunks: exactly one chunk per segment
     assert int(nv.sum()) == 8 and sum(scheduled.values()) == 1
     assert not finish.any()             # 3-chunk prompts can't finish yet
+    # the single budgeted chunk is the lane's FIRST -> install flagged,
+    # and the schedule drains after step 0 (split point for the segment)
+    assert install.sum() == 1 and drain == 1
     res = sched.run()
     for r in reqs:
         want = _oneshot(cfg, params, gates, r, policy="trimkv", **serve)

@@ -1,0 +1,251 @@
+"""Cross-memory continuous batching (PR 5): vlm / encdec through the
+lane scheduler.
+
+Claims under test (docs/serving.md §Cross-memory families):
+  1. The Scheduler accepts vlm/encdec engines, and every request's
+     output is token-identical to its one-shot
+     Engine.generate(chunked=True) — with RAGGED per-request memory
+     lengths packed into one padded slab + per-lane mem_len — for all
+     seven policies x both attention impls x both admission modes.
+  2. Lane lifecycle never leaks memory: requests carry DISTINCT
+     memories and B < N forces lane reuse, so any stale xk/xv read
+     after a reset would break parity; reset_lanes invalidates memory
+     metadata (mem_len := 0) while neighbor lanes stay bit-identical.
+  3. Preemption (recompute-style) under churn keeps cross-family
+     outputs token-identical, including when the victim's memory must
+     be reinstalled on re-admission.
+  4. submit() rejects cross-family requests without memory before any
+     device program sees them.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.serve import Request, Scheduler, Status, build_engine
+
+ALL_POLICIES = ["trimkv", "streaming_llm", "h2o", "snapkv", "rkv",
+                "keydiff", "full"]
+FAMILIES = {
+    "vlm": ("llama-3.2-vision-90b", "vision_embeds"),
+    "encdec": ("seamless-m4t-large-v2", "source_embeds"),
+}
+
+
+@pytest.fixture(scope="module", params=sorted(FAMILIES))
+def fam(request):
+    arch, mem_key = FAMILIES[request.param]
+    cfg = get_smoke_config(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    gates = T.init_gate_params(jax.random.PRNGKey(1), cfg)
+    return cfg, params, gates, mem_key
+
+
+def _mem_shape(cfg):
+    if cfg.family == "encdec":
+        return cfg.source_len, cfg.d_model
+    return cfg.num_image_tokens, cfg.vision_dim
+
+
+def _requests(cfg, mem_key, lens, max_new, seed0=0, priority=None):
+    """Ragged prompts AND ragged per-request memory lengths (half to
+    full slab), every request with a DISTINCT random memory — lane
+    reuse with stale cross-memory would break one-shot parity."""
+    rng = np.random.RandomState(7)
+    S, feat = _mem_shape(cfg)
+    reqs = []
+    for i, (L, m) in enumerate(zip(lens, max_new)):
+        S_i = int(rng.randint(max(S // 2, 1), S + 1))
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.randint(0, cfg.vocab_size, size=L).astype(np.int32),
+            max_new=m, seed=seed0 + i,
+            priority=0 if priority is None else priority[i],
+            extra_inputs={mem_key:
+                          rng.randn(S_i, feat).astype(np.float32) * 0.1}))
+    return reqs
+
+
+def _oneshot(cfg, params, gates, mem_key, req, *, policy,
+             attn_impl="xla", **serve_kw):
+    """Parity oracle: this request alone, one-shot chunked engine, its
+    own UNPADDED memory."""
+    eng = build_engine(cfg, params, gates, policy=policy,
+                      attn_impl=attn_impl, **serve_kw)
+    return eng.generate(
+        req.prompt[None], req.max_new, chunked=True, seed=req.seed,
+        extra_inputs={mem_key: req.extra_inputs[mem_key][None]})["ids"][0]
+
+
+# --------------------------------------------- scheduler == one-shot
+
+
+@pytest.mark.parametrize("attn_impl", ["xla", "pallas"])
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_cross_scheduler_matches_oneshot(fam, policy, attn_impl):
+    """3 ragged requests (ragged memory too) on 2 lanes, both admission
+    modes: every policy x impl must reproduce one-shot generation
+    token-for-token. Lane reuse (N > B) means a stale-memory leak on
+    reset, a wrong mem_len mask, or a mispacked slab fails here."""
+    cfg, params, gates, mem_key = fam
+    serve = dict(budget=16, prefill_chunk=8)
+    reqs = _requests(cfg, mem_key, [5, 11, 9], [4, 3, 5])
+    eng = build_engine(cfg, params, gates, policy=policy,
+                       attn_impl=attn_impl, decode_segment=4, **serve)
+    res_phased = Scheduler(eng, n_lanes=2, interleaved=False).run(reqs)
+    res_inter = Scheduler(eng, n_lanes=2, interleaved=True).run(reqs)
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, mem_key, r, policy=policy,
+                        attn_impl=attn_impl, **serve)
+        np.testing.assert_array_equal(res_phased[r.rid].ids, want,
+                                      err_msg=f"phased rid={r.rid}")
+        np.testing.assert_array_equal(res_inter[r.rid].ids, want,
+                                      err_msg=f"interleaved rid={r.rid}")
+        assert res_phased[r.rid].status is Status.DONE
+        assert res_inter[r.rid].status is Status.DONE
+
+
+@pytest.mark.parametrize("interleaved", [False, True])
+def test_cross_scheduler_preemption_and_churn(fam, interleaved):
+    """Priority preemption on one lane under churn: the victim's lane
+    (memory included) is recycled by the preemptor, then the victim is
+    re-admitted with its memory REINSTALLED — both outputs must still
+    equal their uninterrupted one-shot runs, and the dispatch formula
+    keeps counting."""
+    cfg, params, gates, mem_key = fam
+    serve = dict(budget=16, prefill_chunk=8)
+    reqs = _requests(cfg, mem_key, [9, 7], [14, 4], priority=[0, 3])
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=2, sched_policy="priority", **serve)
+    sched = Scheduler(eng, n_lanes=1, interleaved=interleaved)
+    sched.submit(reqs[0])
+    for _ in range(4):                  # rid 0 mid-generation
+        sched.step()
+    sched.submit(reqs[1])
+    res = sched.run()
+    assert res[0].n_preempts >= 1
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, mem_key, r, policy="trimkv",
+                        **serve)
+        np.testing.assert_array_equal(res[r.rid].ids, want,
+                                      err_msg=f"rid={r.rid}")
+    assert eng.dispatch_count == (sched.n_prefill_rounds +
+                                  sched.n_segments + sched.n_resets)
+
+
+# ------------------------------------------------------ lane lifecycle
+
+
+def _lane_leaves(state, lane):
+    out = []
+    if state["layers"] is not None:
+        out += [np.asarray(l)[:, lane]
+                for l in jax.tree.leaves(state["layers"])]
+    out += [np.asarray(l)[lane] for l in jax.tree.leaves(state["tail"])]
+    out.append(np.asarray(state["t"])[lane])
+    return out
+
+
+def test_cross_lane_reset_invalidates_memory(fam):
+    """reset_lanes on a cross-family state zeroes the reset lane's
+    mem_len (its stale xk/xv bytes become unreadable — a decode on that
+    lane attends to ZERO memory) while every neighbor lane's state,
+    memory slab included, comes back bit-identical."""
+    cfg, params, gates, mem_key = fam
+    S, feat = _mem_shape(cfg)
+    eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                       prefill_chunk=8)
+    rng = np.random.RandomState(11)
+    tokens = rng.randint(0, cfg.vocab_size, size=(3, 20))
+    extra = {mem_key: jnp.asarray(
+        rng.randn(3, S, feat).astype(np.float32) * 0.1)}
+    state, _ = eng.prefill(jnp.asarray(tokens), extra, chunked=True)
+    before = jax.tree.map(lambda a: np.asarray(a), state)
+    after = T.reset_lanes(state, jnp.asarray([False, True, False]))
+    for lane in (0, 2):
+        for a, b in zip(_lane_leaves(before, lane),
+                        _lane_leaves(after, lane)):
+            np.testing.assert_array_equal(a, b)
+    # the reset lane's memory is invalidated (mem_len 0) everywhere a
+    # cross layer keeps one
+    flat = jax.tree_util.tree_flatten_with_path(after)[0]
+    n_mem = 0
+    for path, leaf in flat:
+        name = next((p.key for p in reversed(path)
+                     if isinstance(p, jax.tree_util.DictKey)), None)
+        if name != "mem_len":
+            continue
+        leaf = np.asarray(leaf)
+        lane_slice = leaf[:, 1] if leaf.ndim == 2 else leaf[1]
+        assert (lane_slice == 0).all()
+        n_mem += 1
+    assert n_mem > 0
+    # before the reset the prefill had installed real lengths
+    for path, leaf in jax.tree_util.tree_flatten_with_path(before)[0]:
+        name = next((p.key for p in reversed(path)
+                     if isinstance(p, jax.tree_util.DictKey)), None)
+        if name == "mem_len":
+            assert (np.asarray(leaf) == S).all()
+
+
+def test_cross_attn_zero_memory_outputs_zero(fam):
+    """mem_len == 0 must mean 'attends to NOTHING -> exactly zero', on
+    every cross-attention path: the chunked/prefill path
+    (cross_attn_apply — a fully-masked softmax row must not degrade to
+    the mean of the value vectors), the XLA decode path
+    (cache.memory_attend) and the pallas decode kernel."""
+    from repro.core.cache import memory_attend
+    from repro.kernels import ops as kernel_ops
+    from repro.models import blocks
+    cfg, params, gates, mem_key = fam
+    S, _ = _mem_shape(cfg)
+    cross_i = next(i for i, k in enumerate(cfg.attn_pattern)
+                   if k == "cross")
+    p = jax.tree.map(lambda a: np.asarray(a)[0],
+                     T.init_params(jax.random.PRNGKey(5), cfg)
+                     ["layers"])[cross_i]["xattn"]
+    rng = np.random.RandomState(3)
+    B = 3
+    xk = jnp.asarray(rng.randn(B, S, cfg.num_kv_heads, cfg.head_dim)
+                     .astype(np.float32))
+    xv = jnp.asarray(rng.randn(B, S, cfg.num_kv_heads, cfg.head_dim)
+                     .astype(np.float32))
+    x = jnp.asarray(rng.randn(B, 4, cfg.d_model).astype(np.float32))
+    mem_len = jnp.asarray([0, S, 0])
+    out = np.asarray(blocks.cross_attn_apply(p, cfg, x, (xk, xv),
+                                             mem_len=mem_len))
+    assert (out[0] == 0).all() and (out[2] == 0).all()
+    assert np.abs(out[1]).max() > 0
+    q = jnp.asarray(rng.randn(B, cfg.num_heads, cfg.head_dim)
+                    .astype(np.float32))
+    out_d = np.asarray(memory_attend(q, xk, xv, mem_len))
+    assert (out_d[0] == 0).all() and (out_d[2] == 0).all()
+    from repro.core.cache import memory_pos
+    pos = jnp.broadcast_to(memory_pos(mem_len, S),
+                           (B, cfg.num_kv_heads, S))
+    out_p = np.asarray(kernel_ops.decode_attention(
+        q, jnp.moveaxis(xk, 1, 2), jnp.moveaxis(xv, 1, 2), pos,
+        jnp.zeros((B,), jnp.int32), impl="pallas"))
+    assert (out_p[0] == 0).all() and (out_p[2] == 0).all()
+
+
+def test_cross_submit_requires_memory(fam):
+    """A cross-family request without extra_inputs fails loudly at
+    submit, before touching any device program."""
+    cfg, params, gates, mem_key = fam
+    eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
+                       prefill_chunk=8)
+    sched = Scheduler(eng, n_lanes=1)
+    bad = Request(rid=0, prompt=np.arange(4), max_new=2)
+    with pytest.raises(ValueError, match="requires extra_inputs"):
+        sched.submit(bad)
+    S, feat = _mem_shape(cfg)
+    toobig = Request(rid=1, prompt=np.arange(4), max_new=2,
+                     extra_inputs={mem_key: np.zeros((S + 1, feat),
+                                                     np.float32)})
+    with pytest.raises(ValueError, match="exceeds the family slab"):
+        sched.submit(toobig)
