@@ -188,6 +188,30 @@ class ServeConfig:
     # (recompute-style preemption), which keeps its final output
     # token-identical to an uninterrupted run. FIFO never preempts.
     preempt: bool = True
+    # --- fault tolerance (docs/serving.md §Fault tolerance) ---
+    # swap_preempt: preempt decoding victims by SWAP-OUT instead of
+    # recompute — T.extract_lanes gathers the victim's retained slab
+    # (O(M), not O(T): eviction already compressed the lane) into a
+    # host LaneSnapshot, and re-admission restores it bit-identically
+    # with insert_lanes, keeping the tokens already emitted. Mid-prefill
+    # victims (interleaved admission) still restart from scratch.
+    # False = PR-4 recompute-style preemption everywhere.
+    swap_preempt: bool = True
+    # max_retries: fault recoveries (quarantine + replay) a request may
+    # consume before it is FAILED terminally. A lane whose segment
+    # produced non-finite logits is scrubbed (T.scrub_lanes) and its
+    # request replayed from its last snapshot (or from scratch).
+    max_retries: int = 2
+    # checkpoint_every: snapshot every decoding lane each N segments
+    # (0 = off) so fault replay resumes from the last checkpoint
+    # instead of recomputing the whole request.
+    checkpoint_every: int = 0
+    # shed_policy: what submit() does when max_queue requests already
+    # wait. "reject" — refuse the newcomer (Status.REJECTED);
+    # "evict" — if the newcomer strictly outranks the worst queued
+    # request under sched_policy, shed THAT request (REJECTED, reason
+    # "shed") and accept the newcomer; otherwise reject the newcomer.
+    shed_policy: str = "reject"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,10 +1,10 @@
 from repro.core import cache, gates, losses, policies
 from repro.core.cache import (cache_insert, cache_topm_merge, decode_attend,
-                              init_cache, reset_lanes)
+                              init_cache, reset_lanes, scrub_lanes)
 from repro.core.policies import POLICIES, make_policy
 
 __all__ = [
     "cache", "gates", "losses", "policies",
     "init_cache", "cache_insert", "cache_topm_merge", "decode_attend",
-    "reset_lanes", "POLICIES", "make_policy",
+    "reset_lanes", "scrub_lanes", "POLICIES", "make_policy",
 ]

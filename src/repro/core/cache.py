@@ -65,6 +65,23 @@ def reset_lanes(cache, lane_mask):
     return new
 
 
+def scrub_lanes(cache, lane_mask):
+    """reset_lanes plus K/V payload zeroing — the quarantine primitive.
+    An ordinary retire leaves K/V bytes in place (invisible once
+    pos < 0), but a NaN-poisoned lane must not keep them: attention
+    masks slots with a `where` over the SCORES, so a NaN payload byte
+    still reaches the p@v product where 0 x NaN = NaN leaks through.
+    Scrubbing overwrites the masked lanes' K/V with zeros so the lane
+    is numerically inert before reuse. lane_mask: [B] bool.
+    transformer.scrub_lanes applies the same fills pytree-wide
+    (parity asserted in tests/test_faults.py)."""
+    new = reset_lanes(cache, lane_mask)
+    m = lane_mask[:, None, None, None]
+    new["k"] = jnp.where(m, jnp.zeros((), cache["k"].dtype), cache["k"])
+    new["v"] = jnp.where(m, jnp.zeros((), cache["v"].dtype), cache["v"])
+    return new
+
+
 def memory_pos(mem_len, S: int):
     """Pseudo slot positions for a cross-attention memory slab: 0 for
     the first mem_len slots of each lane, -1 beyond — the same metadata

@@ -13,6 +13,16 @@ EOS/max_new and refill immediately:
 
   PYTHONPATH=src python -m repro.launch.serve --arch trimkv-paper-4b \
       --smoke --stream --requests 12 --lanes 4 --rate 4.0
+
+Chaos mode (--inject-faults, docs/serving.md §Fault tolerance): a
+seeded FaultInjector NaN-poisons lanes, delays dispatches and
+burst-submits hostile traffic while the supervision loop quarantines,
+replays, times out and sheds — every request still terminates, and the
+printed counters show the degradation:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch trimkv-paper-4b \
+      --smoke --stream --inject-faults --corrupt-prob 0.3 \
+      --burst-prob 0.2 --timeout-ms 30000
 """
 from __future__ import annotations
 
@@ -24,14 +34,14 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.data.synthetic import make_batch
 from repro.models import transformer as T
-from repro.serve import Request, Scheduler, build_engine
+from repro.serve import FaultInjector, Request, Scheduler, build_engine
 from repro.serve.request import latency_percentiles
 
 
 def poisson_requests(n, rate, *, vocab, prompt_lo, prompt_hi, new_lo,
                      new_hi, seed=0, eos_id=-1, priority_frac=0.0,
                      high_deadline_ms=None, low_deadline_ms=None,
-                     mem_key=None, mem_shape=None):
+                     mem_key=None, mem_shape=None, timeout_ms=None):
     """Synthetic Poisson trace: exponential inter-arrival gaps at
     `rate` req/s, ragged prompt lengths and per-request max_new drawn
     uniformly, one RNG seed per request. A `priority_frac` fraction of
@@ -59,7 +69,7 @@ def poisson_requests(n, rate, *, vocab, prompt_lo, prompt_hi, new_lo,
             eos_id=eos_id, arrival=float(arrivals[i]),
             priority=1 if high else 0,
             deadline_ms=high_deadline_ms if high else low_deadline_ms,
-            extra_inputs=extra))
+            timeout_ms=timeout_ms, extra_inputs=extra))
     return reqs
 
 
@@ -77,24 +87,42 @@ def _run_stream(cfg, params, gates, args):
                        decode_segment=args.decode_segment,
                        sched_policy=args.sched_policy,
                        prefill_budget=args.prefill_budget,
-                       interleaved=args.interleaved)
+                       interleaved=args.interleaved,
+                       shed_policy=args.shed_policy,
+                       checkpoint_every=args.checkpoint_every)
     reqs = poisson_requests(
         args.requests, args.rate, vocab=cfg.vocab_size,
         prompt_lo=max(args.prompt_len // 4, 4), prompt_hi=args.prompt_len,
         new_lo=max(args.max_new // 4, 1), new_hi=args.max_new,
         seed=args.seed, priority_frac=args.priority_frac,
         high_deadline_ms=args.deadline_ms,
-        mem_key=eng.mem_key, mem_shape=eng.mem_shape)
+        mem_key=eng.mem_key, mem_shape=eng.mem_shape,
+        timeout_ms=args.timeout_ms)
+
+    def make_injector():
+        if not args.inject_faults:
+            return None
+        return FaultInjector(seed=args.fault_seed,
+                             corrupt_prob=args.corrupt_prob,
+                             delay_prob=args.delay_prob,
+                             delay_sec=args.delay_sec,
+                             burst_prob=args.burst_prob)
+
     # warm-up drain on a throwaway scheduler: compiles every admission/
     # segment shape (closures are cached on the engine), so the printed
-    # latencies measure serving, not XLA compilation
-    Scheduler(eng, n_lanes=args.lanes).run(reqs)
-    sched = Scheduler(eng, n_lanes=args.lanes)
+    # latencies measure serving, not XLA compilation. Fault injection
+    # rides the warm-up too (same seed) so the scrub/resume closures
+    # compile before the measured run.
+    Scheduler(eng, n_lanes=args.lanes,
+              injector=make_injector()).run(reqs)
+    sched = Scheduler(eng, n_lanes=args.lanes, injector=make_injector())
     eng.dispatch_count = 0           # count the measured run only
     results = sched.run(reqs, respect_arrivals=True)
-    lats = [results[r.rid].latency_sec for r in reqs]
+    lats = [results[r.rid].latency_sec for r in reqs
+            if results[r.rid].latency_sec is not None]
     total_tok = sum(len(results[r.rid].tokens) for r in reqs)
-    wall = max(rs.finish_sec for rs in results.values())
+    wall = max(rs.finish_sec or 0.0 for rs in results.values())
+    st = sched.stats()
     print(f"stream: {args.requests} requests over {args.lanes} lanes "
           f"(policy={args.policy} budget={args.budget} "
           f"segment={args.decode_segment} sched={args.sched_policy} "
@@ -103,6 +131,21 @@ def _run_stream(cfg, params, gates, args):
           f"(prefill rounds={sched.n_prefill_rounds}, "
           f"segments={sched.n_segments}, resets={sched.n_resets}, "
           f"preempted={sched.n_preempted}) — O(segments), never O(tokens)")
+    # supervision counters (docs/serving.md §Fault tolerance): swaps/
+    # resumes are the snapshot preemption path; the rest only move
+    # under faults or overload — degradation is observable, not silent
+    print(f"  supervision: swaps={st['n_swaps']} "
+          f"resumes={st['n_resumes']} retries={st['n_retries']} "
+          f"quarantined={st['n_quarantined']} shed={st['n_shed']} "
+          f"timeouts={st['n_timeouts']} failed={st['n_failed']} "
+          f"faults_injected={st['n_faults_injected']}")
+    if args.inject_faults:
+        from repro.serve.request import TERMINAL_STATUSES
+        n_terminal = sum(rs.status in TERMINAL_STATUSES
+                         for rs in results.values())
+        print(f"  chaos: {len(results)} submitted (bursts included), "
+              f"{n_terminal} terminal — liveness "
+              f"{'OK' if n_terminal == len(results) else 'VIOLATED'}")
     print(f"  {total_tok} tokens in {wall:.2f}s "
           f"= {total_tok / max(wall, 1e-9):.1f} tok/s; latency "
           f"mean {np.mean(lats):.2f}s p95 {np.percentile(lats, 95):.2f}s")
@@ -118,8 +161,10 @@ def _run_stream(cfg, params, gates, args):
               f"deadline misses {len(missed)}")
     for r in reqs[: min(4, len(reqs))]:
         rs = results[r.rid]
+        lat = (f"{rs.latency_sec:.2f}s" if rs.latency_sec is not None
+               else rs.status.value)
         print(f"  req {r.rid}: prompt {r.prompt_len} -> "
-              f"{len(rs.tokens)} tokens, latency {rs.latency_sec:.2f}s, "
+              f"{len(rs.tokens)} tokens, latency {lat}, "
               f"ids {rs.ids[:8]}")
 
 
@@ -175,6 +220,36 @@ def main():
                          "priority class (priority 1 + deadline)")
     ap.add_argument("--deadline-ms", type=float, default=500.0,
                     help="--stream: latency SLO for the high class")
+    # --- fault tolerance (PR 6, docs/serving.md §Fault tolerance) ---
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="--stream: attach a seeded FaultInjector "
+                         "(NaN poison / delays / traffic bursts) and "
+                         "report the liveness verdict")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="--inject-faults: injector RNG seed")
+    ap.add_argument("--corrupt-prob", type=float, default=0.25,
+                    help="--inject-faults: per-step probability of "
+                         "NaN-poisoning one decoding lane's KV cache")
+    ap.add_argument("--delay-prob", type=float, default=0.0,
+                    help="--inject-faults: per-step probability of a "
+                         "host-side dispatch delay")
+    ap.add_argument("--delay-sec", type=float, default=0.05,
+                    help="--inject-faults: length of an injected delay")
+    ap.add_argument("--burst-prob", type=float, default=0.1,
+                    help="--inject-faults: per-step probability of "
+                         "burst-submitting hostile traffic")
+    ap.add_argument("--timeout-ms", type=float, default=None,
+                    help="--stream: per-request wall-clock timeout "
+                         "(cancelled with TIMED_OUT beyond it)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="--stream: snapshot decoding lanes every N "
+                         "segments (0 = off) so fault replay resumes "
+                         "from the last checkpoint")
+    ap.add_argument("--shed-policy", choices=("reject", "evict"),
+                    default="reject",
+                    help="--stream: overload response when max_queue "
+                         "requests wait (reject newcomer, or evict the "
+                         "worst queued request if outranked)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

@@ -136,6 +136,30 @@ def memory_len(cfg) -> int:
     return 0
 
 
+# ---------------------------------------------------- lane movability
+#
+# Every leaf init_block_state allocates is BATCH-LEADING (lane axis 0),
+# which is what makes a lane's state first-class movable: the serving
+# layer gathers lanes out (transformer.extract_lanes -> LaneSnapshot),
+# scatters them back (insert_lanes), retires them (reset_lanes) and
+# quarantines them (scrub_lanes) with generic per-leaf tree ops. The
+# two tables below are the single definition of what those ops write,
+# kept HERE next to the state definition so adding a leaf to a block
+# state forces the question of how it retires.
+#
+# LANE_RESET_FILLS: per-leaf-name retire fill. Metadata is invalidated
+# (pos := -1 makes a slot invisible everywhere; mem_len := 0 makes the
+# cross-memory slab unreadable), recurrences and clocks zero. Matches
+# core.cache.reset_lanes (parity asserted in tests/test_scheduler.py).
+LANE_RESET_FILLS = {"pos": -1, "beta": 1.0, "aux": 0.0, "h": 0.0,
+                    "conv": 0.0, "mem_len": 0}
+# LANE_PAYLOAD_LEAVES: bulk K/V bytes an ordinary retire leaves in
+# place (invisible once their metadata is cleared, overwritten by the
+# next insert anyway) but a QUARANTINE must zero — a NaN payload byte
+# survives metadata masking (0 x NaN = NaN in the p@v product).
+LANE_PAYLOAD_LEAVES = ("k", "v", "xk", "xv")
+
+
 def init_block_state(cfg, kind: str, batch: int, budget: int, dtype):
     if kind in ("global", "local", "cross"):
         M = min(budget, cfg.window) if (kind == "local" and cfg.window > 0) \

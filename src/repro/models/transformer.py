@@ -606,7 +606,8 @@ def sample_token_lanes(logits, keys, *, greedy, temperature):
 
 def decode_segment_loop(params, gate_params, cfg, state, tok, keys, active,
                         n_emitted, max_new, eos_id, n_steps, policy, *,
-                        greedy=True, temperature=0.0, attn_impl="xla"):
+                        greedy=True, temperature=0.0, attn_impl="xla",
+                        n_real=None):
     """Masked continuous-batching decode segment: n_steps of the fused
     sample -> embed -> layers -> evict -> logits cycle under ONE
     lax.scan, over B independent lanes that may be mid-request, finished
@@ -624,31 +625,52 @@ def decode_segment_loop(params, gate_params, cfg, state, tok, keys, active,
     (early-exit-safe: the step that emits the final token still updates
     the lane's state, exactly like the one-shot loop it must match).
 
+    n_real: optional traced scalar — run only the first n_real of the
+    n_steps scan steps, freezing the padded tail bit-identically (every
+    lane masked inactive there, no emissions, no state/RNG updates).
+    The scheduler rounds remainder segments up to power-of-two BUCKETS
+    and masks the tail, so cold-start compiles scale with
+    log2(decode_segment) buckets instead of with every distinct
+    remainder length.
+
     Returns (state, tok, keys, active, n_emitted,
-             ids [B, n_steps] int32, emitted [B, n_steps] bool) —
-    ids[l, j] is valid output for lane l iff emitted[l, j]."""
-    def body(carry, _):
-        state, tok, keys, active, n_emitted = carry
+             ids [B, n_steps] int32, emitted [B, n_steps] bool,
+             ok [B] bool) — ids[l, j] is valid output for lane l iff
+    emitted[l, j]; ok[l] False means lane l produced NON-FINITE logits
+    on some step it was active (a poisoned cache / numerical fault):
+    its emissions are suspect and the supervision layer (serve.faults)
+    quarantines + replays it."""
+    if n_real is None:
+        n_real = n_steps
+
+    def body(carry, j):
+        state, tok, keys, active, n_emitted, ok = carry
+        live = active & (j < n_real)
         # each step emits the PRE-step carry token (mirroring
         # decode_loop, which emits first_token before feeding it)
-        emit = active
+        emit = live
         state, logits = decode_step(params, gate_params, cfg, state, tok,
                                     policy, attn_impl=attn_impl,
-                                    active=active)
-        nxt, keys = sample_token_lanes(logits, keys, greedy=greedy,
-                                       temperature=temperature)
+                                    active=live)
+        # in-program health: a poisoned lane's logits go non-finite;
+        # flagging it here costs zero extra dispatches
+        ok = ok & (~live | jnp.all(jnp.isfinite(logits), axis=-1))
+        nxt, new_keys = sample_token_lanes(logits, keys, greedy=greedy,
+                                           temperature=temperature)
+        keys = jnp.where(live[:, None], new_keys, keys)
         n_emitted = n_emitted + emit.astype(jnp.int32)
         done = emit & (((eos_id >= 0) & (tok == eos_id)) |
                        (n_emitted >= max_new))
         new_tok = jnp.where(emit, nxt, tok)
-        return (state, new_tok, keys, active & ~done, n_emitted), \
+        return (state, new_tok, keys, active & ~done, n_emitted, ok), \
             (tok, emit)
 
-    (state, tok, keys, active, n_emitted), (toks, emits) = jax.lax.scan(
-        body, (state, tok, keys, active, n_emitted), None,
-        length=n_steps)
+    ok0 = jnp.ones(tok.shape[0], bool)
+    (state, tok, keys, active, n_emitted, ok), (toks, emits) = \
+        jax.lax.scan(body, (state, tok, keys, active, n_emitted, ok0),
+                     jnp.arange(n_steps))
     return (state, tok, keys, active, n_emitted,
-            jnp.moveaxis(toks, 0, 1), jnp.moveaxis(emits, 0, 1))
+            jnp.moveaxis(toks, 0, 1), jnp.moveaxis(emits, 0, 1), ok)
 
 
 def mixed_step_loop(params, gate_params, cfg, state, tok, keys, active,
@@ -695,7 +717,9 @@ def mixed_step_loop(params, gate_params, cfg, state, tok, keys, active,
     key for every lane that finishes prefill within this segment).
     Other operands as decode_segment_loop. Returns the same tuple:
     (state, tok, keys, active, n_emitted, ids [B, n_steps],
-    emitted [B, n_steps]).
+    emitted [B, n_steps], ok [B] — False where a lane produced
+    non-finite logits while decoding or at its prefill->decode
+    transition; see decode_segment_loop).
 
     Cross-memory families: mem_inputs (the extra_inputs dict, padded
     [B,S,feat] + per-lane "mem_len") and mem_install ([B] bool: lanes
@@ -710,7 +734,7 @@ def mixed_step_loop(params, gate_params, cfg, state, tok, keys, active,
                                lanes_mask=mem_install)
 
     def body(carry, xs):
-        state, tok, keys, active, n_emitted = carry
+        state, tok, keys, active, n_emitted, ok = carry
         ctoks, nv, fin = xs
         # --- decode sub-step (mirrors decode_segment_loop exactly:
         # emit the carried token, feed it, sample the next) ---
@@ -718,8 +742,11 @@ def mixed_step_loop(params, gate_params, cfg, state, tok, keys, active,
         state, logits = decode_step(params, gate_params, cfg, state, tok,
                                     policy, attn_impl=attn_impl,
                                     active=active)
-        nxt, keys = sample_token_lanes(logits, keys, greedy=greedy,
-                                       temperature=temperature)
+        ok = ok & (~active | jnp.all(jnp.isfinite(logits), axis=-1))
+        nxt, new_dec_keys = sample_token_lanes(logits, keys,
+                                               greedy=greedy,
+                                               temperature=temperature)
+        keys = jnp.where(active[:, None], new_dec_keys, keys)
         n_emitted = n_emitted + emit.astype(jnp.int32)
         done = emit & (((eos_id >= 0) & (tok == eos_id)) |
                        (n_emitted >= max_new))
@@ -736,35 +763,40 @@ def mixed_step_loop(params, gate_params, cfg, state, tok, keys, active,
         # consumes split(seed_key) exactly like a fresh decode_loop.
         # The full-vocab projection only pays on steps where some lane
         # actually finishes (at most one step per lane per prompt)
-        first = jax.lax.cond(
-            jnp.any(fin),
-            lambda h: jnp.argmax(compute_logits(params, cfg, h),
-                                 axis=-1).astype(jnp.int32),
-            lambda h: jnp.zeros((h.shape[0],), jnp.int32),
+        def _first_and_health(h):
+            lg = compute_logits(params, cfg, h)
+            return (jnp.argmax(lg, axis=-1).astype(jnp.int32),
+                    jnp.all(jnp.isfinite(lg), axis=-1))
+
+        first, fin_ok = jax.lax.cond(
+            jnp.any(fin), _first_and_health,
+            lambda h: (jnp.zeros((h.shape[0],), jnp.int32),
+                       jnp.ones((h.shape[0],), bool)),
             h_last)
+        ok = ok & (~fin | fin_ok)
         new_tok = jnp.where(fin, first, new_tok)
         keys = jnp.where(fin[:, None], new_keys, keys)
         n_emitted = jnp.where(fin, 0, n_emitted)
-        return (state, new_tok, keys, dec_active | fin, n_emitted), \
+        return (state, new_tok, keys, dec_active | fin, n_emitted, ok), \
             (tok, emit)
 
-    (state, tok, keys, active, n_emitted), (toks, emits) = jax.lax.scan(
-        body, (state, tok, keys, active, n_emitted),
-        (chunks, chunk_valid, finish))
+    ok0 = jnp.ones(tok.shape[0], bool)
+    (state, tok, keys, active, n_emitted, ok), (toks, emits) = \
+        jax.lax.scan(body, (state, tok, keys, active, n_emitted, ok0),
+                     (chunks, chunk_valid, finish))
     return (state, tok, keys, active, n_emitted,
-            jnp.moveaxis(toks, 0, 1), jnp.moveaxis(emits, 0, 1))
+            jnp.moveaxis(toks, 0, 1), jnp.moveaxis(emits, 0, 1), ok)
 
 
-# reset targets per leaf name: slot metadata is invalidated (pos -1
-# makes a slot invisible everywhere; mem_len 0 likewise makes the
-# cross-memory slab unreadable), recurrences and clocks zero; K/V and
+# reset targets per leaf name — defined in blocks.py next to
+# init_block_state (the single place that allocates the leaves): slot
+# metadata is invalidated, recurrences and clocks zero; K/V and
 # cross-memory BYTES are left in place — invisible to every attention
 # read once their metadata is cleared, and fully overwritten by the
 # next insert_lanes / install_memory anyway. The cache fills must
 # match core.cache.reset_lanes (the per-cache primitive; parity
 # asserted in tests/test_scheduler.py).
-_LANE_RESET = {"pos": -1, "beta": 1.0, "aux": 0.0, "h": 0.0, "conv": 0.0,
-               "mem_len": 0}
+_LANE_RESET = blocks.LANE_RESET_FILLS
 
 
 def reset_lanes(state, lane_mask):
@@ -814,6 +846,62 @@ def insert_lanes(state, sub_state, lanes):
         out["layers"] = None
     out["tail"] = jax.tree.map(lambda o, n: o.at[lanes].set(n),
                                state["tail"], sub_state["tail"])
+    return out
+
+
+def extract_lanes(state, lanes):
+    """Inverse of insert_lanes: gather lanes `lanes` ([k] int32) of the
+    B-lane state into a standalone batch-k sub-state. Because eviction
+    keeps each lane's live KV inside a bounded M-slot slab (pos -1
+    marks the dead slots), the gathered pytree IS the lane's complete
+    movable state — O(M x layers) regardless of how many tokens the
+    lane has generated — so swap-out/snapshot is an O(M) DMA, not an
+    O(T) one. insert_lanes(state, extract_lanes(state, lanes), lanes)
+    is a bit-exact no-op (asserted in tests/test_faults.py)."""
+    lanes = jnp.asarray(lanes, jnp.int32)
+    out = {"t": state["t"][lanes]}
+    if state["layers"] is not None:
+        out["layers"] = jax.tree.map(lambda a: a[:, lanes],
+                                     state["layers"])
+    else:
+        out["layers"] = None
+    out["tail"] = jax.tree.map(lambda a: a[lanes], state["tail"])
+    return out
+
+
+# scrub additionally zeroes the payload bytes that reset_lanes leaves
+# in place: a NaN-poisoned lane's K/V (self- and cross-attention) would
+# otherwise survive the metadata reset and 0 x NaN = NaN leaks through
+# the masked p@v einsum the moment any later read touches the slab.
+_LANE_SCRUB = dict(_LANE_RESET,
+                   **{n: 0.0 for n in blocks.LANE_PAYLOAD_LEAVES})
+
+
+def scrub_lanes(state, lane_mask):
+    """reset_lanes plus payload zeroing: the quarantine primitive. A
+    lane whose dispatch produced non-finite outputs may hold NaN/Inf in
+    ANY leaf, including the K/V bytes that an ordinary retire leaves in
+    place, so recovery overwrites them with zeros before the lane is
+    reused. Neighbor lanes are untouched. lane_mask: [B] bool."""
+    def scrub(axis):
+        def f(path, leaf):
+            name = next((p.key for p in reversed(path)
+                         if isinstance(p, jax.tree_util.DictKey)), None)
+            if name not in _LANE_SCRUB:
+                return leaf
+            shape = [1] * leaf.ndim
+            shape[axis] = lane_mask.shape[0]
+            fill = jnp.full_like(leaf, _LANE_SCRUB[name])
+            return jnp.where(lane_mask.reshape(shape), fill, leaf)
+        return f
+
+    out = {"t": jnp.where(lane_mask, 0, state["t"])}
+    if state["layers"] is not None:
+        out["layers"] = jax.tree_util.tree_map_with_path(
+            scrub(1), state["layers"])
+    else:
+        out["layers"] = None
+    out["tail"] = jax.tree_util.tree_map_with_path(scrub(0), state["tail"])
     return out
 
 

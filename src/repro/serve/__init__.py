@@ -1,6 +1,9 @@
 from repro.serve.engine import Engine, build_engine
-from repro.serve.request import Request, RequestState, Status
+from repro.serve.faults import FaultInjector, poison_lanes
+from repro.serve.request import (TERMINAL_STATUSES, LaneSnapshot, Request,
+                                 RequestState, Status)
 from repro.serve.scheduler import Scheduler
 
 __all__ = ["Engine", "build_engine", "Request", "RequestState", "Status",
-           "Scheduler"]
+           "Scheduler", "FaultInjector", "poison_lanes", "LaneSnapshot",
+           "TERMINAL_STATUSES"]

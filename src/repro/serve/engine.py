@@ -159,15 +159,18 @@ class Engine:
                     keys.at[lanes].set(new_keys))
 
         def _segment(state, tok, keys, active, n_emitted, max_new, eos,
-                     n_steps):
-            # n_steps is static: the scheduler runs full segments AND
-            # the pure-decode remainder of a drained interleaved
-            # segment through the same closure (one compile per
-            # distinct length, bounded by decode_segment)
+                     n_steps, n_real):
+            # n_steps is STATIC (the scan length) but the scheduler
+            # rounds it up to power-of-two BUCKETS and passes the
+            # logical length as the TRACED n_real (tail steps masked
+            # bit-identically), so cold-start compiles scale with
+            # log2(decode_segment) buckets, not with every distinct
+            # drain-split remainder length
             return T.decode_segment_loop(
                 params, gates, cfg, state, tok, keys, active, n_emitted,
                 max_new, eos, n_steps, policy, greedy=greedy,
-                temperature=serve.temperature, attn_impl=impl)
+                temperature=serve.temperature, attn_impl=impl,
+                n_real=n_real)
 
         def _mixed_core(state, tok, keys, active, n_emitted, max_new,
                         eos, chunks, chunk_valid, finish, new_keys,
@@ -218,6 +221,26 @@ class Engine:
                                    {mem_key: mem, "mem_len": mem_len},
                                    install)
 
+        def _extract(state, tok, keys, lanes):
+            # swap-out / checkpoint: gather the lanes' complete movable
+            # state + carried token + RNG chain in ONE dispatch. lanes
+            # is always padded to n_lanes entries (extras repeat a real
+            # lane; the host keeps only the first k rows) so the
+            # closure compiles once, not once per victim count. state
+            # is NOT donated: the source lanes live on.
+            lanes = jnp.asarray(lanes, jnp.int32)
+            return T.extract_lanes(state, lanes), tok[lanes], keys[lanes]
+
+        def _resume(state, tok, keys, sub, sub_tok, sub_keys, lanes):
+            # swap-in: scatter host LaneSnapshots (stacked + padded to
+            # n_lanes rows; pad rows carry lane index n_lanes = OUT OF
+            # BOUNDS, which jax scatter drops) back into their new
+            # lanes — bit-identical to never having left the device
+            lanes = jnp.asarray(lanes, jnp.int32)
+            state = T.insert_lanes(state, sub, lanes)
+            return (state, tok.at[lanes].set(sub_tok),
+                    keys.at[lanes].set(sub_keys))
+
         mixed_jit = jax.jit(_mixed, donate_argnums=(0,))
         closures = {
             "admit": jax.jit(_admit, donate_argnums=(0,)),
@@ -229,6 +252,10 @@ class Engine:
             "mixed_nomem": (mixed_jit if mem_key is None else
                             jax.jit(_mixed_plain, donate_argnums=(0,))),
             "reset": jax.jit(T.reset_lanes, donate_argnums=(0,)),
+            "extract": jax.jit(_extract),
+            "resume": jax.jit(_resume, donate_argnums=(0,)),
+            # quarantine: reset + zero the poisoned lanes' K/V payload
+            "scrub": jax.jit(T.scrub_lanes, donate_argnums=(0,)),
         }
         self._lane_closures[greedy] = closures
         return closures

@@ -39,7 +39,19 @@ def latency_percentiles(vals):
 class Status(enum.Enum):
     QUEUED = "queued"        # accepted, waiting for a free lane
     RUNNING = "running"      # occupying a lane (prefilling or decoding)
+    PARKED = "parked"        # swapped out on purpose (Scheduler.park);
+    #                          held OFF the queue until revive()
     DONE = "done"            # retired on EOS or max_new
+    FAILED = "failed"        # gave up after max_retries recoveries
+    TIMED_OUT = "timed_out"  # cancelled by its wall-clock timeout_ms
+    REJECTED = "rejected"    # refused at submit (validation / overload)
+
+
+# Every submitted request must reach EXACTLY ONE of these — the
+# liveness oracle the chaos suite (tests/test_faults.py) asserts under
+# arbitrary injected fault schedules.
+TERMINAL_STATUSES = frozenset(
+    {Status.DONE, Status.FAILED, Status.TIMED_OUT, Status.REJECTED})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,33 +79,69 @@ class Request:
     arrival: float = 0.0
     priority: int = 0
     deadline_ms: Optional[float] = None
+    # hard wall-clock budget (submit -> finish). Exceeding it cancels
+    # the request (lane reset, Status.TIMED_OUT) instead of letting a
+    # stuck generation pin a lane forever. None = no timeout.
+    timeout_ms: Optional[float] = None
     extra_inputs: Optional[Dict[str, np.ndarray]] = None
 
     def __post_init__(self):
+        # Construction only NORMALIZES — it never raises. Malformed
+        # requests (empty prompt, max_new < 1, bad deadlines, bad
+        # memory shapes) are reported by validation_error() and turned
+        # into a structured Status.REJECTED at Scheduler.submit, so a
+        # bad request in a stream can never crash the serving loop.
         prompt = np.asarray(self.prompt, np.int32).reshape(-1)
-        if prompt.size < 1:
-            raise ValueError(f"request {self.rid}: empty prompt")
-        if self.max_new < 1:
-            raise ValueError(f"request {self.rid}: max_new must be >= 1")
-        if self.deadline_ms is not None and self.deadline_ms <= 0:
-            raise ValueError(f"request {self.rid}: deadline_ms must be "
-                             f"positive (or None for no deadline)")
         object.__setattr__(self, "prompt", prompt)
         if self.extra_inputs is not None:
-            extra = {}
-            for k, v in self.extra_inputs.items():
-                v = np.asarray(v, np.float32)
-                if v.ndim != 2 or v.shape[0] < 1:
-                    raise ValueError(
-                        f"request {self.rid}: extra_inputs[{k!r}] must "
-                        f"be a [S>=1, feat] array (unbatched), got "
-                        f"shape {v.shape}")
-                extra[k] = v
+            extra = {k: np.asarray(v, np.float32)
+                     for k, v in self.extra_inputs.items()}
             object.__setattr__(self, "extra_inputs", extra)
+
+    def validation_error(self) -> Optional[str]:
+        """Reason this request can never be served (None = valid).
+        Scheduler.submit turns a non-None reason into Status.REJECTED
+        on the RequestState instead of raising at the caller."""
+        if self.prompt.size < 1:
+            return "empty prompt"
+        if self.max_new < 1:
+            return f"max_new must be >= 1, got {self.max_new}"
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            return f"deadline_ms must be positive, got {self.deadline_ms}"
+        if self.timeout_ms is not None and self.timeout_ms <= 0:
+            return f"timeout_ms must be positive, got {self.timeout_ms}"
+        if self.extra_inputs is not None:
+            for k, v in self.extra_inputs.items():
+                if v.ndim != 2 or v.shape[0] < 1:
+                    return (f"extra_inputs[{k!r}] must be a [S>=1, feat] "
+                            f"array (unbatched), got shape {v.shape}")
+        return None
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+
+@dataclasses.dataclass
+class LaneSnapshot:
+    """Host-side copy of one lane's COMPLETE movable state, gathered by
+    T.extract_lanes: the retained KV slab of every layer (K/V, slot
+    positions, retention betas, policy aux), recurrent/SSM hidden +
+    conv tails, the cross-memory slab + mem_len, the per-lane clock
+    state["t"], the carried next-token, the lane's RNG chain, and the
+    emission count. Restoring it with insert_lanes is bit-identical to
+    never having left the device — the parity oracle in
+    tests/test_faults.py — and its footprint is O(M x layers), small by
+    construction (eviction already compressed the lane), which is what
+    makes swap-out preemption, parking, and replay-on-fault affordable.
+
+    `n_tokens` records len(RequestState.tokens) at capture so a replay
+    can truncate the host-side stream to the snapshot point."""
+    state: dict                      # per-lane sub-state pytree (numpy)
+    tok: np.ndarray                  # [] int32 next token to emit/feed
+    key: np.ndarray                  # [2] uint32 RNG chain
+    n_emitted: int
+    n_tokens: int                    # len(rs.tokens) when captured
 
 
 @dataclasses.dataclass
@@ -116,9 +164,16 @@ class RequestState:
     #                                        (deterministic, unlike the
     #                                        wall-clock timestamps)
     finish_sec: Optional[float] = None  # when it retired
-    n_preempts: int = 0                 # times evicted mid-flight and
-    #                                     re-queued (restart-from-scratch
-    #                                     recompute, vLLM-style)
+    n_preempts: int = 0                 # times evicted mid-flight
+    #                                     (swap-out + resume, or
+    #                                     restart-from-scratch recompute
+    #                                     for mid-prefill victims)
+    n_retries: int = 0                  # fault recoveries (quarantine +
+    #                                     replay) consumed so far
+    reason: Optional[str] = None        # why REJECTED / FAILED /
+    #                                     TIMED_OUT (None otherwise)
+    snapshot: Optional[LaneSnapshot] = None  # last swap-out / checkpoint
+    #                                     (resume-instead-of-recompute)
 
     @property
     def rid(self) -> int:
@@ -127,6 +182,13 @@ class RequestState:
     @property
     def done(self) -> bool:
         return self.status is Status.DONE
+
+    @property
+    def terminal(self) -> bool:
+        """True once the request reached one of the four terminal
+        statuses (DONE | FAILED | TIMED_OUT | REJECTED) — the liveness
+        invariant: every submitted request terminates exactly once."""
+        return self.status in TERMINAL_STATUSES
 
     @property
     def ids(self) -> np.ndarray:

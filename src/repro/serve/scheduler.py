@@ -1,5 +1,5 @@
 """Lane-based continuous batching over the fused serving loops, with
-SLO-aware admission (PR 4).
+SLO-aware admission (PR 4) and fault-tolerant supervision (PR 6).
 
 The `Scheduler` owns B fixed LANES (the batch dim of one shared decode
 state). Each lane holds at most one in-flight request; the scheduler
@@ -13,28 +13,54 @@ state). Each lane holds at most one in-flight request; the scheduler
      step of the next decode segments (T.mixed_step_loop), bounded by
      `prefill_budget` tokens per segment — so a long prompt never
      stalls in-flight decodes and admission costs ZERO extra
-     dispatches;
+     dispatches. Requests holding a LaneSnapshot (swapped-out preemption
+     victims, parked sessions, fault replays) are RESUMED instead:
+     one dispatch scatters their host snapshots back into lanes,
+     bit-identical to never having left the device;
   2. runs bounded fused DECODE SEGMENTS (T.decode_segment_loop, or
      T.mixed_step_loop while any lane is still prefilling:
      serve_cfg.decode_segment steps under one lax.scan, per-lane active
-     masks / clocks / RNG chains / max_new / eos);
+     masks / clocks / RNG chains / max_new / eos). Remainder segments
+     (the pure-decode half of a drain-split) are rounded up to
+     POWER-OF-TWO buckets with the tail masked (traced n_real), so
+     cold-start compiles scale with log2(decode_segment) buckets, not
+     with every distinct remainder length;
   3. RETIRES lanes whose request emitted its eos_id or max_new-th token
      at the segment boundary (T.reset_lanes — in the slot-dense layout
      a lane reset is pos := -1, no paged block tables) and immediately
      refills them from the queue. Under priority/edf it may also
      PREEMPT the worst running lane (lowest priority / latest deadline)
-     when a strictly better-ranked request waits with no free lane: the
-     victim is reset and re-queued, restarting from scratch
-     (recompute-style preemption), so its final output stays
-     token-identical to an uninterrupted run.
+     when a strictly better-ranked request waits with no free lane:
+     with serve_cfg.swap_preempt (default) a decoding victim is
+     SWAPPED OUT — T.extract_lanes gathers its retained slab (O(M),
+     eviction already compressed the lane) into a host LaneSnapshot,
+     and re-admission resumes it with its emitted tokens intact;
+     mid-prefill victims (and swap_preempt=False) restart from scratch
+     (recompute-style), so either way the final output stays
+     token-identical to an uninterrupted run;
+  4. SUPERVISES every dispatch: the segment programs carry an
+     in-program per-lane health flag (`ok` — non-finite logits on any
+     step the lane was live), and a flagged lane is QUARANTINED at the
+     segment boundary: its emissions are discarded, its state scrubbed
+     (T.scrub_lanes: reset + K/V payload zeroed, so NaN bytes cannot
+     leak through the masked p@v product), and its request replayed
+     from its last snapshot (or from scratch) up to
+     serve_cfg.max_retries times before a terminal FAILED. Per-request
+     wall-clock timeouts (Request.timeout_ms) cancel stuck requests
+     (TIMED_OUT), and queue overload is shed per serve_cfg.shed_policy
+     instead of growing without bound. Every submitted request reaches
+     EXACTLY ONE terminal status (DONE | FAILED | TIMED_OUT |
+     REJECTED) — the liveness oracle tests/test_faults.py asserts
+     under seeded fault injection (serve.faults.FaultInjector).
 
 Dispatch accounting: every device program this scheduler launches bumps
 the owning Engine's `dispatch_count`, and the total is
-n_prefill_rounds + n_segments + n_resets — O(prefill rounds +
-segments), NEVER O(tokens) or O(requests); interleaved mode keeps
-n_prefill_rounds at 0 because admission rides inside the segments
-(tests/test_scheduler.py asserts the exact formula under churn and
-mixed traffic).
+n_prefill_rounds + n_segments + n_resets + n_swaps + n_resumes
+(+ n_faults_injected under fault injection) — O(prefill rounds +
+segments + preemptions), NEVER O(tokens) or O(requests); interleaved
+mode keeps n_prefill_rounds at 0 because admission rides inside the
+segments (tests/test_scheduler.py asserts the exact formula under churn
+and mixed traffic).
 
 Cross-memory families (vlm / encdec, PR 5): each request carries its
 own vision/encoder memory in `Request.extra_inputs` (ragged lengths).
@@ -43,7 +69,9 @@ Admission packs an admission round's memories into ONE padded
 prefill (phased: inside the same admission dispatch; interleaved:
 inside the segment program — still zero dedicated dispatches), and
 lane retirement invalidates it (T.reset_lanes: mem_len := 0), so a
-recycled lane can never attend a previous occupant's memory.
+recycled lane can never attend a previous occupant's memory. The
+memory slab + mem_len ride in every LaneSnapshot, so swapped-out cross
+requests resume without re-encoding.
 
 Correctness contract: each request's output is token-identical to a
 one-shot `Engine.generate(prompt[None], max_new, chunked=True,
@@ -51,9 +79,10 @@ seed=seed)` (truncated at its eos; cross families with the request's
 own unpadded memory), for every eviction policy, both attention
 impls, both admission modes, any admission order and under preemption
 — lanes are frozen bit-identically while inactive, each lane's RNG
-chain is seeded from its request alone, and both the ragged phased
-prefill and the per-lane interleaved chunk schedule replay the exact
-chunk sequence one-shot chunked prefill runs.
+chain is seeded from its request alone, snapshots gather/scatter exact
+bytes, and both the ragged phased prefill and the per-lane interleaved
+chunk schedule replay the exact chunk sequence one-shot chunked
+prefill runs.
 
 `continuous=False` degrades the SAME machinery to static batching
 (admission waits until every lane is free, finished lanes idle until
@@ -64,15 +93,18 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.engine import Engine
-from repro.serve.request import Request, RequestState, Status
+from repro.serve.request import (LaneSnapshot, Request, RequestState,
+                                 Status)
 
 SCHED_POLICIES = ("fifo", "priority", "edf")
+SHED_POLICIES = ("reject", "evict")
 
 
 def _chunk_prompt(prompt: np.ndarray, C: int):
@@ -103,6 +135,36 @@ def _prng_keys(seeds) -> np.ndarray:
     return arr
 
 
+def _snap_row(sub, i: int) -> dict:
+    """Slice row i out of a host-side batch-k sub-state, KEEPING a
+    k=1 lane dim so snapshots re-stack with plain concatenate."""
+    row = {"t": sub["t"][i:i + 1]}
+    if sub["layers"] is not None:
+        row["layers"] = jax.tree.map(lambda a: a[:, i:i + 1],
+                                     sub["layers"])
+    else:
+        row["layers"] = None
+    row["tail"] = jax.tree.map(lambda a: a[i:i + 1], sub["tail"])
+    return row
+
+
+def _stack_rows(rows: List[dict], n: int) -> dict:
+    """Stack k single-lane snapshot states into an n-row sub-state
+    (pad rows repeat row 0; they scatter to an out-of-bounds lane
+    index, which jax drops — see Engine's resume closure)."""
+    rows = rows + [rows[0]] * (n - len(rows))
+    sub = {"t": np.concatenate([r["t"] for r in rows])}
+    if rows[0]["layers"] is not None:
+        sub["layers"] = jax.tree.map(
+            lambda *xs: np.concatenate(xs, axis=1),
+            *[r["layers"] for r in rows])
+    else:
+        sub["layers"] = None
+    sub["tail"] = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
+                               *[r["tail"] for r in rows])
+    return sub
+
+
 @dataclasses.dataclass
 class _LanePrefill:
     """Host-side progress of one interleaved admission prefill: the
@@ -125,7 +187,8 @@ class _LanePrefill:
 class Scheduler:
     def __init__(self, engine: Engine, n_lanes: int, *, greedy: bool = True,
                  continuous: bool = True,
-                 interleaved: Optional[bool] = None):
+                 interleaved: Optional[bool] = None,
+                 injector=None):
         self.eng = engine
         self.cfg, self.serve = engine.cfg, engine.serve
         self.policy = engine.policy
@@ -138,7 +201,16 @@ class Scheduler:
             raise ValueError(f"unknown sched_policy "
                              f"{self.sched_policy!r}; "
                              f"expected one of {SCHED_POLICIES}")
+        if self.serve.shed_policy not in SHED_POLICIES:
+            raise ValueError(f"unknown shed_policy "
+                             f"{self.serve.shed_policy!r}; "
+                             f"expected one of {SHED_POLICIES}")
         self.greedy = greedy or self.serve.temperature == 0.0
+        # chaos adversary (serve.faults.FaultInjector) — None in
+        # production; when set, step() gives it first crack at the
+        # scheduler (poison / delay / burst), and the supervision
+        # machinery below is what keeps every request terminating
+        self.injector = injector
         # cross-memory families (vlm/encdec): per-request encoder/vision
         # memory is a first-class per-lane resource — admission packs
         # ragged memories into one padded [B, S, feat] slab with
@@ -155,6 +227,9 @@ class Scheduler:
         self._mixed = closures["mixed"]
         self._mixed_nomem = closures["mixed_nomem"]
         self._reset = closures["reset"]
+        self._extract = closures["extract"]
+        self._resume = closures["resume"]
+        self._scrub = closures["scrub"]
 
         # device lane state
         self.state = engine.fresh_state(n_lanes)
@@ -173,17 +248,35 @@ class Scheduler:
         self._submit_seq = 0
         self.results: Dict[int, RequestState] = {}
         # dispatch accounting (engine.dispatch_count gets every launch):
-        # total launches == n_prefill_rounds + n_segments + n_resets —
-        # O(prefills + segments), asserted by tests/test_scheduler.py;
+        # total launches == n_prefill_rounds + n_segments + n_resets
+        # + n_swaps + n_resumes (+ n_faults_injected when an injector
+        # poisons lanes) — O(prefills + segments + preemptions),
+        # asserted by tests/test_scheduler.py and tests/test_faults.py;
         # interleaved admission keeps n_prefill_rounds at 0
         self.n_prefill_rounds = 0
         self.n_segments = 0
         self.n_resets = 0
         self.n_preempted = 0
+        # fault-tolerance counters (surfaced by stats() and the stream
+        # launcher so degradation is observable, not silent)
+        self.n_swaps = 0          # extract dispatches (swap-out,
+        #                           checkpoint, park)
+        self.n_resumes = 0        # resume dispatches (snapshot scatter)
+        self.n_shed = 0           # requests refused/evicted on overload
+        self.n_quarantined = 0    # lanes scrubbed after non-finite
+        #                           outputs
+        self.n_timeouts = 0       # requests cancelled by timeout_ms
+        self.n_failed = 0         # terminal FAILED after max_retries
+        self.n_faults_injected = 0  # injector poison dispatches
         # interleaved segments whose prefill drained mid-segment and
         # were split into a mixed part + a pure-decode remainder (each
         # half is its own dispatch and counts in n_segments)
         self.n_segment_splits = 0
+        # distinct STATIC scan lengths the pure-decode closure was
+        # dispatched with — power-of-two buckets (plus decode_segment
+        # itself), so its size is O(log2 decode_segment), asserted in
+        # tests/test_faults.py
+        self.decode_bucket_lengths = set()
         # global decode-step clock: total scan steps run so far, the
         # basis of the deterministic RequestState.first_emit_step
         self._steps_done = 0
@@ -194,44 +287,70 @@ class Scheduler:
     def _now(self) -> float:
         return time.monotonic() - self._t0
 
-    def _check_memory(self, request: Request) -> None:
+    def _check_memory(self, request: Request) -> Optional[str]:
         """Cross-memory families: every request must carry its own
         memory (vision embeds / source frames), at most the family's
-        slab length — malformed requests fail at submit, not inside a
-        jitted admission program."""
+        slab length. Returns the rejection reason (None = fine) —
+        malformed requests become a structured Status.REJECTED at
+        submit, never a crash inside a jitted admission program."""
         if self.mem_key is None:
-            return
+            return None
         S, feat = self.mem_shape
         extra = request.extra_inputs or {}
         mem = extra.get(self.mem_key)
         if mem is None:
-            raise ValueError(
-                f"request {request.rid}: family {self.cfg.family!r} "
-                f"requires extra_inputs[{self.mem_key!r}]")
-        if mem.shape[1] != feat:
-            raise ValueError(
-                f"request {request.rid}: extra_inputs[{self.mem_key!r}] "
-                f"feature dim {mem.shape[1]} != {feat} (family slab "
-                f"[{S}, {feat}])")
+            return (f"family {self.cfg.family!r} requires "
+                    f"extra_inputs[{self.mem_key!r}]")
+        if mem.ndim != 2 or mem.shape[1] != feat:
+            return (f"extra_inputs[{self.mem_key!r}] shape "
+                    f"{mem.shape} does not match the family slab "
+                    f"[{S}, {feat}]")
         if mem.shape[0] > S:
-            raise ValueError(
-                f"request {request.rid}: extra_inputs[{self.mem_key!r}] "
-                f"length {mem.shape[0]} exceeds the family slab "
-                f"[{S}, {feat}]")
+            return (f"extra_inputs[{self.mem_key!r}] length "
+                    f"{mem.shape[0]} exceeds the family slab "
+                    f"[{S}, {feat}]")
+        return None
 
-    def submit(self, request: Request) -> bool:
-        """Accept a request into the waiting queue. Returns False (the
-        request is REJECTED) when serve_cfg.max_queue requests are
-        already waiting — the admission-control backpressure."""
-        self._check_memory(request)
-        if len(self.queue) >= self.serve.max_queue:
-            return False
+    def _shed(self, rs: RequestState) -> Optional[str]:
+        """Queue overload: serve_cfg.max_queue requests already wait.
+        shed_policy "reject" refuses the newcomer; "evict" sheds the
+        WORST queued request instead when the newcomer strictly
+        outranks it under sched_policy (so an urgent request is never
+        locked out by a full queue of stragglers). Returns the
+        newcomer's rejection reason, or None if it won a slot."""
+        if self.serve.shed_policy == "evict" and self.queue:
+            worst = max(self.queue, key=self._order_key)
+            if self._order_key(rs) < self._order_key(worst):
+                self.queue.remove(worst)
+                worst.status = Status.REJECTED
+                worst.reason = ("shed under overload for "
+                                f"request {rs.rid}")
+                worst.finish_sec = self._now()
+                self.n_shed += 1
+                return None
+        self.n_shed += 1
+        return f"queue full (max_queue={self.serve.max_queue})"
+
+    def submit(self, request: Request) -> RequestState:
+        """Accept a request into the waiting queue. ALWAYS returns its
+        RequestState (recorded in `results`) — a malformed request
+        (empty prompt, max_new < 1, bad/oversized cross memory) or an
+        overloaded queue yields a structured terminal
+        Status.REJECTED with `reason` set, never an exception: a bad
+        request in a stream cannot crash the serving loop."""
         rs = RequestState(request=request, submit_seq=self._submit_seq,
                           submit_sec=self._now())
         self._submit_seq += 1
-        self.queue.append(rs)
         self.results[request.rid] = rs
-        return True
+        reason = request.validation_error() or self._check_memory(request)
+        if reason is None and len(self.queue) >= self.serve.max_queue:
+            reason = self._shed(rs)
+        if reason is not None:
+            rs.status, rs.reason = Status.REJECTED, reason
+            rs.finish_sec = self._now()
+            return rs
+        self.queue.append(rs)
+        return rs
 
     def _order_key(self, rs: RequestState):
         """Admission order under sched_policy — smaller = served first.
@@ -257,6 +376,106 @@ class Scheduler:
     def idle(self) -> bool:
         return not self.queue and self.n_running == 0
 
+    # ----------------------------------------------- snapshots (swap-out)
+
+    def _swap_out(self, lanes: List[int]) -> None:
+        """ONE extract dispatch gathers the lanes' complete movable
+        state (retained KV slab, positions/betas/aux, recurrences,
+        cross-memory slab + mem_len, clock) plus carried token and RNG
+        chain to host LaneSnapshots on their RequestStates. O(M) per
+        lane by construction — eviction already compressed each lane to
+        its budget — which is what makes preemption-by-swap, parking
+        and checkpointing affordable. The lane index operand is padded
+        to n_lanes (extras repeat a real lane; only the first k rows
+        are kept) so the closure compiles once."""
+        idx = np.full(self.n_lanes, lanes[0], np.int32)
+        idx[: len(lanes)] = lanes
+        self.eng.dispatch_count += 1
+        self.n_swaps += 1
+        sub, toks, keys = jax.device_get(
+            self._extract(self.state, self.tok, self.keys,
+                          jnp.asarray(idx)))
+        for i, lane in enumerate(lanes):
+            rs = self.lane_req[lane]
+            rs.snapshot = LaneSnapshot(
+                state=_snap_row(sub, i), tok=toks[i], key=keys[i],
+                n_emitted=int(self.n_emitted[lane]),
+                n_tokens=len(rs.tokens))
+
+    def _resume_lanes(self, batch: List[Tuple[RequestState, int]]) -> None:
+        """ONE resume dispatch scatters k host LaneSnapshots back into
+        lanes — the restored lanes are bit-identical to never having
+        left the device, so the request continues its exact token
+        stream (parity oracle in tests/test_faults.py). Host-side
+        stream/bookkeeping is rolled back to the snapshot point
+        (tokens truncated to snapshot.n_tokens — a no-op on a plain
+        swap-out, a real rollback on fault replay)."""
+        k = len(batch)
+        rows = [rs.snapshot.state for rs, _ in batch]
+        sub = _stack_rows(rows, self.n_lanes)
+        sub_tok = np.zeros((self.n_lanes,), np.int32)
+        sub_keys = np.zeros((self.n_lanes, 2), np.uint32)
+        lane_idx = np.full(self.n_lanes, self.n_lanes, np.int32)
+        for i, (rs, lane) in enumerate(batch):
+            sub_tok[i] = rs.snapshot.tok
+            sub_keys[i] = rs.snapshot.key
+            lane_idx[i] = lane
+        self.eng.dispatch_count += 1
+        self.n_resumes += 1
+        self.state, self.tok, self.keys = self._resume(
+            self.state, self.tok, self.keys,
+            jax.tree.map(jnp.asarray, sub), jnp.asarray(sub_tok),
+            jnp.asarray(sub_keys), jnp.asarray(lane_idx))
+        now = self._now()
+        for rs, lane in batch:
+            snap = rs.snapshot
+            rs.status, rs.lane = Status.RUNNING, lane
+            if rs.admit_sec is None:
+                rs.admit_sec = now
+            del rs.tokens[snap.n_tokens:]
+            self.lane_req[lane] = rs
+            self.lane_prefill[lane] = None
+            self.active[lane] = True
+            self.n_emitted[lane] = snap.n_emitted
+            self.max_new[lane] = rs.request.max_new
+            self.eos[lane] = rs.request.eos_id
+        del k
+
+    def park(self, rid: int) -> RequestState:
+        """Swap a RUNNING (decoding) request out on purpose: its lane
+        is snapshotted and freed, the request held OFF the queue in
+        Status.PARKED until revive(). An idle interactive session stops
+        occupying a lane at O(M) cost and resumes bit-identically."""
+        rs = self.results[rid]
+        if rs.status is not Status.RUNNING or rs.lane < 0:
+            raise ValueError(f"request {rid} is not running "
+                             f"(status={rs.status.value})")
+        lane = rs.lane
+        if self.lane_prefill[lane] is not None:
+            raise ValueError(f"request {rid} is still prefilling; "
+                             f"park applies to decoding lanes")
+        self._swap_out([lane])
+        mask = np.zeros(self.n_lanes, bool)
+        mask[lane] = True
+        self.eng.dispatch_count += 1
+        self.n_resets += 1
+        self.state = self._reset(self.state, jnp.asarray(mask))
+        rs.status, rs.lane = Status.PARKED, -1
+        self.lane_req[lane] = None
+        self.active[lane] = False
+        return rs
+
+    def revive(self, rid: int) -> RequestState:
+        """Re-enqueue a PARKED request; the next admission round
+        resumes it from its snapshot (tokens intact)."""
+        rs = self.results[rid]
+        if rs.status is not Status.PARKED:
+            raise ValueError(f"request {rid} is not parked "
+                             f"(status={rs.status.value})")
+        rs.status = Status.QUEUED
+        self.queue.append(rs)
+        return rs
+
     # -------------------------------------------------------- preemption
 
     def _outranks(self, cand: RequestState, victim: RequestState) -> bool:
@@ -273,13 +492,18 @@ class Scheduler:
         return False
 
     def _maybe_preempt(self) -> None:
-        """Retire the worst running lane (lowest priority / latest
+        """Evict the worst running lane(s) (lowest priority / latest
         deadline) when a strictly better-ranked request waits with no
-        free lane. The victim restarts from scratch on re-admission
-        (tokens discarded, RNG chain re-seeded from its request), so
-        its final output is token-identical to an uninterrupted run —
-        recompute-style preemption, no state swap-out. All victims of
-        one round share a single vectorized reset dispatch."""
+        free lane. serve_cfg.swap_preempt (default): decoding victims
+        are swapped out — one vectorized extract dispatch snapshots
+        them, they keep their emitted tokens, and re-admission RESUMES
+        them where they stopped instead of recomputing (the O(M)
+        footprint makes this a DMA, not a recompute). Mid-prefill
+        victims (interleaved admission) and swap_preempt=False fall
+        back to restart-from-scratch (tokens discarded, RNG re-seeded).
+        Either way the victim's final output is token-identical to an
+        uninterrupted run. All victims share a single vectorized reset
+        dispatch."""
         if (not self.serve.preempt or self.sched_policy == "fifo"
                 or not self.continuous or not self.queue):
             return
@@ -302,6 +526,12 @@ class Scheduler:
             del running[worst_lane]
         if not victims:
             return
+        swapped = set()
+        if self.serve.swap_preempt:
+            swapped = {l for l in victims
+                       if self.lane_prefill[l] is None}
+            if swapped:
+                self._swap_out(sorted(swapped))
         mask = np.zeros(self.n_lanes, bool)
         mask[victims] = True
         self.eng.dispatch_count += 1
@@ -310,9 +540,12 @@ class Scheduler:
         for lane in victims:
             rs = self.lane_req[lane]
             rs.status, rs.lane = Status.QUEUED, -1
-            rs.admit_sec = rs.first_token_sec = None
-            rs.first_emit_step = None
-            rs.tokens.clear()
+            if lane not in swapped:
+                # recompute path: discard progress, restart from scratch
+                rs.snapshot = None
+                rs.admit_sec = rs.first_token_sec = None
+                rs.first_emit_step = None
+                rs.tokens.clear()
             rs.n_preempts += 1
             self.n_preempted += 1
             self.lane_req[lane] = None
@@ -320,6 +553,46 @@ class Scheduler:
             self.active[lane] = False
             self.queue.append(rs)        # re-queued; _order_key decides
             #                              when it gets a lane back
+
+    # ---------------------------------------------------------- timeouts
+
+    def _expire_timeouts(self) -> None:
+        """Cancel requests whose wall clock exceeded their timeout_ms:
+        queued ones leave the queue with no dispatch; running ones free
+        their lanes with one vectorized reset. Terminal status
+        TIMED_OUT either way — a stuck or starved request can never pin
+        a lane (or the queue) forever. PARKED requests are exempt:
+        parking is an explicit caller decision."""
+        now = self._now()
+
+        def expired(rs):
+            tm = rs.request.timeout_ms
+            return tm is not None and (now - rs.submit_sec) * 1e3 > tm
+
+        for rs in [q for q in self.queue if expired(q)]:
+            self.queue.remove(rs)
+            rs.status, rs.finish_sec = Status.TIMED_OUT, now
+            rs.reason = (f"exceeded timeout_ms="
+                         f"{rs.request.timeout_ms} while queued")
+            self.n_timeouts += 1
+        lanes = [l for l, rs in enumerate(self.lane_req)
+                 if rs is not None and expired(rs)]
+        if not lanes:
+            return
+        mask = np.zeros(self.n_lanes, bool)
+        mask[lanes] = True
+        self.eng.dispatch_count += 1
+        self.n_resets += 1
+        self.state = self._reset(self.state, jnp.asarray(mask))
+        for lane in lanes:
+            rs = self.lane_req[lane]
+            rs.status, rs.finish_sec, rs.lane = Status.TIMED_OUT, now, -1
+            rs.reason = (f"exceeded timeout_ms={rs.request.timeout_ms} "
+                         f"while running")
+            self.n_timeouts += 1
+            self.lane_req[lane] = None
+            self.lane_prefill[lane] = None
+            self.active[lane] = False
 
     # --------------------------------------------------------- admission
 
@@ -365,17 +638,36 @@ class Scheduler:
             return []
         return free
 
+    def _take_admissions(self) -> Tuple[List[Tuple[RequestState, int]],
+                                        List[Tuple[RequestState, int]]]:
+        """Pop up to len(free) queued requests in _order_key order and
+        split them into (resume, fresh) lane assignments — requests
+        holding a LaneSnapshot (swap-preempted victims, revived parks,
+        fault replays with a checkpoint) resume instead of
+        re-prefilling."""
+        free = self._claim_lanes()
+        k = min(len(free), len(self.queue))
+        batch = [self._pop_next() for _ in range(k)]
+        resume = [rs for rs in batch if rs.snapshot is not None]
+        fresh = [rs for rs in batch if rs.snapshot is None]
+        lanes = iter(free)
+        return ([(rs, next(lanes)) for rs in resume],
+                [(rs, next(lanes)) for rs in fresh])
+
     def _admit(self) -> int:
         """Phased admission (PR 3): fill free lanes from the queue —
         the whole admission batch (ragged prefill, first tokens, lane
         scatter) is ONE dispatch however many requests it packs, but
-        decode lanes sit idle while it runs."""
-        free = self._claim_lanes()
-        k = min(len(free), len(self.queue))
-        if k == 0:
-            return 0
-        batch = [self._pop_next() for _ in range(k)]
-        lanes = free[:k]
+        decode lanes sit idle while it runs. Snapshot-holding requests
+        are restored by ONE resume dispatch instead (no re-prefill)."""
+        resume, fresh = self._take_admissions()
+        if resume:
+            self._resume_lanes(resume)
+        if not fresh:
+            return len(resume)
+        batch = [rs for rs, _ in fresh]
+        lanes = [lane for _, lane in fresh]
+        k = len(fresh)
         chunks, n_valid = self._pack_prompts(batch)
         # pad rows scatter to index n_lanes: OUT OF BOUNDS, so jax
         # drops them (the default scatter mode) — no lane is touched
@@ -392,14 +684,14 @@ class Scheduler:
             args += self._pack_memory(dict(enumerate(batch)))
         self.state, self.tok, self.keys = self._admit_fn(*args)
         now = self._now()
-        for rs, lane in zip(batch, lanes):
+        for rs, lane in fresh:
             rs.status, rs.lane, rs.admit_sec = Status.RUNNING, lane, now
             self.lane_req[lane] = rs
             self.active[lane] = True
             self.n_emitted[lane] = 0
             self.max_new[lane] = rs.request.max_new
             self.eos[lane] = rs.request.eos_id
-        return k
+        return len(resume) + k
 
     def _admit_interleaved(self) -> int:
         """Interleaved admission: assign requests to free lanes and
@@ -408,15 +700,14 @@ class Scheduler:
         The lane was reset at retire time (pos := -1 makes every slot
         invisible and lose every top-M merge), so chunk-prefilling
         straight into it is token-identical to one-shot prefill into a
-        fresh state."""
-        free = self._claim_lanes()
-        k = min(len(free), len(self.queue))
-        if k == 0:
-            return 0
+        fresh state. Snapshot-holding requests are restored by one
+        resume dispatch — they have no prompt left to prefill."""
+        resume, fresh = self._take_admissions()
+        if resume:
+            self._resume_lanes(resume)
         now = self._now()
         C = self.serve.prefill_chunk
-        for lane in free[:k]:
-            rs = self._pop_next()
+        for rs, lane in fresh:
             self.lane_prefill[lane] = _LanePrefill(
                 *_chunk_prompt(rs.request.prompt, C))
             rs.status, rs.lane, rs.admit_sec = Status.RUNNING, lane, now
@@ -426,7 +717,7 @@ class Scheduler:
             self.n_emitted[lane] = 0
             self.max_new[lane] = rs.request.max_new
             self.eos[lane] = rs.request.eos_id
-        return k
+        return len(resume) + len(fresh)
 
     # ---------------------------------------------------------- decoding
 
@@ -485,10 +776,11 @@ class Scheduler:
         """One mixed prefill/decode dispatch running the prebuilt
         schedule (chunks [d, B, C] — already sliced to the drain
         boundary); commits the host-side chunk progress it carries.
-        Returns the per-step (ids, emitted) rows. Cross families route
-        through the memory-installing closure only when some lane's
-        FIRST chunk rides in this dispatch — otherwise the plain
-        closure skips re-running the encoder/vision projection."""
+        Returns the per-step (ids, emitted) rows plus the per-lane
+        health flags. Cross families route through the
+        memory-installing closure only when some lane's FIRST chunk
+        rides in this dispatch — otherwise the plain closure skips
+        re-running the encoder/vision projection."""
         self.eng.dispatch_count += 1
         self.n_segments += 1
         args = (self.state, self.tok, self.keys, jnp.asarray(self.active),
@@ -504,7 +796,7 @@ class Scheduler:
             args += (mem, mem_len, jnp.asarray(install))
             mixed_fn = self._mixed
         (self.state, self.tok, self.keys, active_d, n_emitted_d, ids,
-         emitted) = mixed_fn(*args)
+         emitted, ok) = mixed_fn(*args)
         for lane, n in scheduled.items():
             pf = self.lane_prefill[lane]
             pf.next_chunk += n
@@ -512,32 +804,85 @@ class Scheduler:
                 self.lane_prefill[lane] = None       # decoding now
         self.active = np.array(active_d)
         self.n_emitted = np.array(n_emitted_d)
-        return np.asarray(ids), np.asarray(emitted)
+        return np.asarray(ids), np.asarray(emitted), np.array(ok)
 
     def _dispatch_decode(self, n_steps: int):
         """One pure-decode dispatch of n_steps steps (a full segment,
-        or the drained remainder of a split interleaved segment)."""
+        or the drained remainder of a split interleaved segment).
+        Remainders are rounded UP to the next power-of-two BUCKET with
+        the tail masked bit-identically inside the scan (traced
+        n_real), so the closure cold-compiles once per bucket —
+        O(log2 decode_segment) shapes — instead of once per distinct
+        remainder length."""
+        seg = self.serve.decode_segment
+        if n_steps >= seg:
+            bucket = n_steps             # the full segment: one shape
+        else:
+            bucket = min(1 << (n_steps - 1).bit_length(), seg)
+        self.decode_bucket_lengths.add(bucket)
         self.eng.dispatch_count += 1
         self.n_segments += 1
         (self.state, self.tok, self.keys, active_d, n_emitted_d, ids,
-         emitted) = self._segment(
+         emitted, ok) = self._segment(
             self.state, self.tok, self.keys, jnp.asarray(self.active),
             jnp.asarray(self.n_emitted), jnp.asarray(self.max_new),
-            jnp.asarray(self.eos), n_steps)
+            jnp.asarray(self.eos), bucket, np.int32(n_steps))
         # np.array (copy): asarray views of device buffers are read-only
         self.active = np.array(active_d)
         self.n_emitted = np.array(n_emitted_d)
-        return np.asarray(ids), np.asarray(emitted)
+        # masked bucket-tail steps emit nothing; slice to logical length
+        return (np.asarray(ids)[:, :n_steps],
+                np.asarray(emitted)[:, :n_steps], np.array(ok))
+
+    def _quarantine(self, bad: List[int]) -> None:
+        """Recover lanes whose segment produced non-finite outputs:
+        scrub their state (reset + K/V payload zeroed — T.scrub_lanes,
+        one vectorized dispatch), discard this segment's suspect
+        emissions, and replay each victim from its last snapshot (or
+        from scratch) unless it exhausted serve_cfg.max_retries — then
+        it is FAILED terminally instead of wedging the loop."""
+        mask = np.zeros(self.n_lanes, bool)
+        mask[bad] = True
+        self.eng.dispatch_count += 1
+        self.n_resets += 1
+        self.state = self._scrub(self.state, jnp.asarray(mask))
+        self.n_quarantined += len(bad)
+        now = self._now()
+        for lane in bad:
+            rs = self.lane_req[lane]
+            self.lane_req[lane] = None
+            self.lane_prefill[lane] = None
+            self.active[lane] = False
+            rs.lane = -1
+            rs.n_retries += 1
+            if rs.n_retries > self.serve.max_retries:
+                rs.status, rs.finish_sec = Status.FAILED, now
+                rs.reason = (f"non-finite outputs persisted after "
+                             f"{self.serve.max_retries} replays")
+                self.n_failed += 1
+                continue
+            rs.status = Status.QUEUED
+            if rs.snapshot is not None:
+                # replay from the last checkpoint: roll the host-side
+                # stream back to the snapshot point
+                del rs.tokens[rs.snapshot.n_tokens:]
+            else:
+                # no checkpoint: recompute from scratch
+                rs.tokens.clear()
+                rs.admit_sec = rs.first_token_sec = None
+                rs.first_emit_step = None
+            self.queue.append(rs)
 
     def _run_segment(self) -> List[RequestState]:
         """One logical segment (serve.decode_segment steps) over all
         lanes — plain decode, or, while any lane is still prefilling
         (interleaved admission), the mixed prefill/decode program SPLIT
         at the drain boundary: mixed steps only while prompt chunks
-        remain, the pure-decode closure for the rest. The split keeps
-        dispatches O(segments) (each half counts in n_segments) and
-        stops drained steps from paying the per-step chunk sub-step.
-        Harvest emissions, retire lanes that finished inside the
+        remain, the pure-decode closure (power-of-two bucketed) for the
+        rest. The split keeps dispatches O(segments) (each half counts
+        in n_segments) and stops drained steps from paying the per-step
+        chunk sub-step. Harvest emissions, quarantine lanes whose
+        health flag tripped, retire lanes that finished inside the
         segment; TTFT derives from each lane's first-emission STEP
         (interpolated over the segment wall time), not the harvest
         timestamp."""
@@ -549,21 +894,25 @@ class Scheduler:
                 self._build_prefill_schedule(n_steps)
             # every scheduled chunk lies before `drain`, so slicing the
             # grids to [:drain] dispatches exactly the built schedule
-            ids, emitted = self._dispatch_mixed(
+            ids, emitted, ok = self._dispatch_mixed(
                 chunks[:drain], nv[:drain], finish[:drain], new_keys,
                 scheduled, install)
             if drain < n_steps:
                 self.n_segment_splits += 1
-                ids2, emitted2 = self._dispatch_decode(n_steps - drain)
+                ids2, emitted2, ok2 = self._dispatch_decode(
+                    n_steps - drain)
                 ids = np.concatenate([ids, ids2], axis=1)
                 emitted = np.concatenate([emitted, emitted2], axis=1)
+                ok = ok & ok2
         else:
-            ids, emitted = self._dispatch_decode(n_steps)
+            ids, emitted, ok = self._dispatch_decode(n_steps)
+        bad = [l for l in range(self.n_lanes)
+               if not ok[l] and self.lane_req[l] is not None]
         finished, retired_lanes, now = [], [], self._now()
         for lane in range(self.n_lanes):
             rs = self.lane_req[lane]
-            if rs is None:
-                continue
+            if rs is None or lane in bad:
+                continue                 # bad lanes: emissions suspect
             new_toks = ids[lane][emitted[lane]]
             if new_toks.size and not rs.tokens:
                 # first emission: stamp the within-segment step it
@@ -580,6 +929,8 @@ class Scheduler:
                 finished.append(rs)
                 retired_lanes.append(lane)
         self._steps_done += n_steps
+        if bad:
+            self._quarantine(bad)
         if retired_lanes:
             # one vectorized reset for every lane retired this segment
             mask = np.zeros(self.n_lanes, bool)
@@ -587,14 +938,28 @@ class Scheduler:
             self.eng.dispatch_count += 1
             self.n_resets += 1
             self.state = self._reset(self.state, jnp.asarray(mask))
+        every = self.serve.checkpoint_every
+        if every > 0 and self.n_segments % every == 0:
+            decoding = [l for l in range(self.n_lanes)
+                        if self.lane_req[l] is not None
+                        and self.lane_prefill[l] is None
+                        and self.active[l]]
+            if decoding:
+                # periodic checkpoint: fault replay resumes from here
+                # instead of recomputing the whole request
+                self._swap_out(decoding)
         return finished
 
     # --------------------------------------------------------- top level
 
     def step(self) -> List[RequestState]:
-        """One scheduling round: preempt if an SLO demands it, admit
-        into free lanes, then run one fused segment. Returns the
+        """One scheduling round: let the fault injector act (chaos
+        runs), expire timeouts, preempt if an SLO demands it, admit /
+        resume into free lanes, then run one fused segment. Returns the
         requests that finished."""
+        if self.injector is not None:
+            self.injector.on_step(self)
+        self._expire_timeouts()
         self._maybe_preempt()
         if self.interleaved:
             self._admit_interleaved()
@@ -607,24 +972,47 @@ class Scheduler:
             return self._run_segment()
         return []
 
+    def stats(self) -> Dict[str, int]:
+        """Supervision / dispatch counters (the stream launcher prints
+        these, and the chaos suite asserts on them — degradation must
+        be observable, not silent)."""
+        return {
+            "n_prefill_rounds": self.n_prefill_rounds,
+            "n_segments": self.n_segments,
+            "n_segment_splits": self.n_segment_splits,
+            "n_resets": self.n_resets,
+            "n_preempted": self.n_preempted,
+            "n_swaps": self.n_swaps,
+            "n_resumes": self.n_resumes,
+            "n_shed": self.n_shed,
+            "n_quarantined": self.n_quarantined,
+            "n_timeouts": self.n_timeouts,
+            "n_failed": self.n_failed,
+            "n_faults_injected": self.n_faults_injected,
+            "n_retries": sum(rs.n_retries for rs in self.results.values()),
+        }
+
     def run(self, requests: Iterable[Request] = (),
             respect_arrivals: bool = False) -> Dict[int, RequestState]:
-        """Drain: serve every given (plus already queued) request to
-        completion and return {rid: RequestState}. With
+        """Drain: serve every given (plus already queued) request to a
+        terminal status and return {rid: RequestState}. With
         respect_arrivals, each request is submitted once wall-clock
         reaches its `arrival` offset (fast-forwarding when the engine
-        goes idle, so a sparse Poisson trace never sleeps)."""
+        goes idle, so a sparse Poisson trace never sleeps). Requests
+        PARKED via park() are left parked — revive() puts them back in
+        play."""
         pending = sorted(requests, key=lambda r: r.arrival)
         pending.reverse()                # pop() takes the earliest
         while pending or self.queue or self.n_running:
-            # submit due arrivals; a max_queue rejection leaves the
-            # request at the head of `pending` to retry once the queue
-            # drains (nothing is silently dropped)
+            # submit due arrivals; when the queue is at max_queue the
+            # remaining arrivals WAIT here (backpressure) instead of
+            # being shed — they retry once the queue drains, so a drain
+            # run never drops traffic it was handed
             now = self._now()
             while pending and (not respect_arrivals or
                                pending[-1].arrival <= now or self.idle):
-                if not self.submit(pending[-1]):
+                if len(self.queue) >= self.serve.max_queue:
                     break
-                pending.pop()
+                self.submit(pending.pop())
             self.step()
         return self.results

@@ -380,16 +380,23 @@ def test_first_emit_step_interleaved_counts_prefill_steps(tiny):
 
 
 def test_queue_backpressure(tiny):
-    """submit() rejects beyond serve_cfg.max_queue."""
+    """submit() beyond serve_cfg.max_queue yields a structured
+    Status.REJECTED RequestState (reason set, recorded in results) —
+    the admission-control backpressure, PR-6 graceful-rejection form."""
     cfg, params, gates = tiny
     eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
                        prefill_chunk=8, max_queue=2)
     sched = Scheduler(eng, n_lanes=1)
     reqs = _requests([5, 6, 7], [2, 2, 2])
-    assert sched.submit(reqs[0]) and sched.submit(reqs[1])
-    assert not sched.submit(reqs[2])
+    assert sched.submit(reqs[0]).status is Status.QUEUED
+    assert sched.submit(reqs[1]).status is Status.QUEUED
+    rej = sched.submit(reqs[2])
+    assert rej.status is Status.REJECTED
+    assert "queue full" in rej.reason
     res = sched.run()
-    assert sorted(res) == [0, 1]
+    assert sorted(res) == [0, 1, 2]
+    assert res[0].status is Status.DONE and res[1].status is Status.DONE
+    assert res[2].status is Status.REJECTED
 
 
 # ------------------------------------------------- SLO-aware scheduling
@@ -425,18 +432,23 @@ def test_edf_admission_order_under_backpressure(tiny):
     assert order == [2, 0, 1, 3]
 
 
+@pytest.mark.parametrize("swap", [True, False])
 @pytest.mark.parametrize("interleaved", [False, True])
-def test_preempted_request_matches_uninterrupted(tiny, interleaved):
-    """A high-priority arrival evicts the running low-priority lane
-    (reset + re-queue, recompute-style); the victim restarts from
-    scratch on re-admission, so BOTH requests' final outputs are
-    token-identical to their uninterrupted one-shot runs, and the
-    dispatch formula keeps counting the preemption reset."""
+def test_preempted_request_matches_uninterrupted(tiny, interleaved, swap):
+    """A high-priority arrival evicts the running low-priority lane.
+    With swap_preempt (default) the decoding victim is SWAPPED OUT —
+    snapshotted to host (one extract dispatch), its emitted tokens
+    kept — and RESUMED bit-identically on re-admission; with
+    swap_preempt=False it restarts from scratch. Either way BOTH
+    requests' final outputs are token-identical to their uninterrupted
+    one-shot runs, and the dispatch formula keeps counting the
+    preemption reset plus the swap/resume dispatches."""
     cfg, params, gates = tiny
     serve = dict(budget=16, prefill_chunk=8)
     reqs = _requests([9, 7], [16, 4], priority=[0, 3])
     eng = build_engine(cfg, params, gates, policy="trimkv",
-                       decode_segment=2, sched_policy="priority", **serve)
+                       decode_segment=2, sched_policy="priority",
+                       swap_preempt=swap, **serve)
     sched = Scheduler(eng, n_lanes=1, interleaved=interleaved)
     sched.submit(reqs[0])
     for _ in range(4):                  # rid 0 mid-generation
@@ -445,12 +457,19 @@ def test_preempted_request_matches_uninterrupted(tiny, interleaved):
     res = sched.run()
     assert res[0].n_preempts >= 1
     assert res[1].finish_sec < res[0].finish_sec
+    if swap:
+        # the decoding victim went through snapshot/resume, not
+        # recompute — and kept the tokens it had already emitted
+        assert sched.n_swaps >= 1 and sched.n_resumes >= 1
+    else:
+        assert sched.n_swaps == 0 and sched.n_resumes == 0
     for r in reqs:
         want = _oneshot(cfg, params, gates, r, policy="trimkv", **serve)
         np.testing.assert_array_equal(res[r.rid].ids, want,
                                       err_msg=f"rid={r.rid}")
     assert eng.dispatch_count == (sched.n_prefill_rounds +
-                                  sched.n_segments + sched.n_resets)
+                                  sched.n_segments + sched.n_resets +
+                                  sched.n_swaps + sched.n_resumes)
 
 
 def test_preempt_mid_prefill_lane_matches_uninterrupted(tiny):
@@ -474,12 +493,16 @@ def test_preempt_mid_prefill_lane_matches_uninterrupted(tiny):
     sched.submit(reqs[1])
     res = sched.run()
     assert res[0].n_preempts >= 1
+    # mid-prefill victims always take the recompute path, even under
+    # swap_preempt: there is no decode carry to snapshot yet
+    assert sched.n_swaps == 0 and sched.n_resumes == 0
     for r in reqs:
         want = _oneshot(cfg, params, gates, r, policy="trimkv", **serve)
         np.testing.assert_array_equal(res[r.rid].ids, want,
                                       err_msg=f"rid={r.rid}")
     assert eng.dispatch_count == (sched.n_prefill_rounds +
-                                  sched.n_segments + sched.n_resets)
+                                  sched.n_segments + sched.n_resets +
+                                  sched.n_swaps + sched.n_resumes)
 
 
 def test_prefill_budget_schedule_and_parity(tiny):

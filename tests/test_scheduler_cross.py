@@ -113,9 +113,11 @@ def test_cross_scheduler_matches_oneshot(fam, policy, attn_impl):
 def test_cross_scheduler_preemption_and_churn(fam, interleaved):
     """Priority preemption on one lane under churn: the victim's lane
     (memory included) is recycled by the preemptor, then the victim is
-    re-admitted with its memory REINSTALLED — both outputs must still
-    equal their uninterrupted one-shot runs, and the dispatch formula
-    keeps counting."""
+    re-admitted — under swap_preempt (the default) its snapshot carries
+    the cross-memory slab + mem_len, so resume restores the memory
+    WITHOUT re-encoding — both outputs must still equal their
+    uninterrupted one-shot runs, and the dispatch formula keeps
+    counting."""
     cfg, params, gates, mem_key = fam
     serve = dict(budget=16, prefill_chunk=8)
     reqs = _requests(cfg, mem_key, [9, 7], [14, 4], priority=[0, 3])
@@ -133,8 +135,10 @@ def test_cross_scheduler_preemption_and_churn(fam, interleaved):
                         **serve)
         np.testing.assert_array_equal(res[r.rid].ids, want,
                                       err_msg=f"rid={r.rid}")
+    assert sched.n_swaps >= 1 and sched.n_resumes >= 1
     assert eng.dispatch_count == (sched.n_prefill_rounds +
-                                  sched.n_segments + sched.n_resets)
+                                  sched.n_segments + sched.n_resets +
+                                  sched.n_swaps + sched.n_resumes)
 
 
 # ------------------------------------------------------ lane lifecycle
@@ -234,18 +238,26 @@ def test_cross_attn_zero_memory_outputs_zero(fam):
 
 
 def test_cross_submit_requires_memory(fam):
-    """A cross-family request without extra_inputs fails loudly at
-    submit, before touching any device program."""
+    """A cross-family request without extra_inputs is rejected
+    structurally at submit — Status.REJECTED plus a reason, no
+    exception, before touching any device program."""
+    from repro.serve import Status
     cfg, params, gates, mem_key = fam
     eng = build_engine(cfg, params, gates, budget=16, policy="trimkv",
                        prefill_chunk=8)
     sched = Scheduler(eng, n_lanes=1)
     bad = Request(rid=0, prompt=np.arange(4), max_new=2)
-    with pytest.raises(ValueError, match="requires extra_inputs"):
-        sched.submit(bad)
+    rs = sched.submit(bad)
+    assert rs.status is Status.REJECTED
+    assert "requires extra_inputs" in rs.reason
     S, feat = _mem_shape(cfg)
     toobig = Request(rid=1, prompt=np.arange(4), max_new=2,
                      extra_inputs={mem_key: np.zeros((S + 1, feat),
                                                      np.float32)})
-    with pytest.raises(ValueError, match="exceeds the family slab"):
-        sched.submit(toobig)
+    rs = sched.submit(toobig)
+    assert rs.status is Status.REJECTED
+    assert "exceeds the family slab" in rs.reason
+    # both rejections are terminal, recorded, and dispatched nothing
+    assert sorted(sched.results) == [0, 1]
+    assert eng.dispatch_count == 0
+    assert sched.run() == sched.results
