@@ -11,7 +11,8 @@ import traceback
 from benchmarks import (fig3_pareto, fig5_interpretability, roofline,
                         table1_longproc, table3_longmem, table5_ablation,
                         table6_throughput, table7_serving, table8_slo,
-                        table9_chunked_prefill, table10_faults)
+                        table9_chunked_prefill, table10_faults,
+                        table11_store)
 
 BENCHES = (
     ("fig3_pareto", fig3_pareto.run),
@@ -23,6 +24,7 @@ BENCHES = (
     ("table8_slo", table8_slo.run),
     ("table9_chunked_prefill", table9_chunked_prefill.run),
     ("table10_faults", table10_faults.run),
+    ("table11_store", table11_store.run),
     ("fig5_interpretability", fig5_interpretability.run),
     ("roofline", roofline.run),
 )

@@ -212,6 +212,25 @@ class ServeConfig:
     # request under sched_policy, shed THAT request (REJECTED, reason
     # "shed") and accept the newcomer; otherwise reject the newcomer.
     shed_policy: str = "reject"
+    # --- tiered snapshot store (PR 7, docs/serving.md §Snapshot store) -
+    # snapshot_host_bytes: byte budget of the host-RAM LRU snapshot
+    # pool (0 = unlimited). Over budget, cold snapshots spill to the
+    # disk tier (when snapshot_dir is set) or are dropped with a
+    # counter (the request falls back to recompute-from-prompt).
+    snapshot_host_bytes: int = 0
+    # snapshot_dir: directory for the disk tier — np.memmap slab files
+    # + a JSON manifest, written by a bounded-queue async writer.
+    # Parks/checkpoints write through (durable); a new Scheduler over
+    # the same dir recovers every parked session bit-identically
+    # (crash-restart). None = host-RAM only (the PR-6 behavior).
+    snapshot_dir: Optional[str] = None
+    # park_exempts_timeout: True (default) exempts PARKED sessions from
+    # Request.timeout_ms — parking is an explicit caller decision, and
+    # an idle parked chat session may far outlive any per-request SLO.
+    # False enforces the timeout while parked too: an expired parked
+    # request goes TIMED_OUT (zero dispatches) and its snapshots are
+    # released from every tier.
+    park_exempts_timeout: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

@@ -89,7 +89,9 @@ def _run_stream(cfg, params, gates, args):
                        prefill_budget=args.prefill_budget,
                        interleaved=args.interleaved,
                        shed_policy=args.shed_policy,
-                       checkpoint_every=args.checkpoint_every)
+                       checkpoint_every=args.checkpoint_every,
+                       snapshot_dir=args.snapshot_dir,
+                       snapshot_host_bytes=args.snapshot_host_bytes)
     reqs = poisson_requests(
         args.requests, args.rate, vocab=cfg.vocab_size,
         prompt_lo=max(args.prompt_len // 4, 4), prompt_hi=args.prompt_len,
@@ -106,7 +108,9 @@ def _run_stream(cfg, params, gates, args):
                              corrupt_prob=args.corrupt_prob,
                              delay_prob=args.delay_prob,
                              delay_sec=args.delay_sec,
-                             burst_prob=args.burst_prob)
+                             burst_prob=args.burst_prob,
+                             snap_corrupt_prob=args.snap_corrupt_prob,
+                             io_error_prob=args.io_error_prob)
 
     # warm-up drain on a throwaway scheduler: compiles every admission/
     # segment shape (closures are cached on the engine), so the printed
@@ -139,6 +143,20 @@ def _run_stream(cfg, params, gates, args):
           f"quarantined={st['n_quarantined']} shed={st['n_shed']} "
           f"timeouts={st['n_timeouts']} failed={st['n_failed']} "
           f"faults_injected={st['n_faults_injected']}")
+    # snapshot store tiers (docs/serving.md §Snapshot store): hit/spill
+    # traffic plus the degradation counters — detected corruption, IO
+    # errors and capacity drops must be visible, never silent
+    print(f"  store: puts={st['store_puts']} "
+          f"ram_hits={st['store_ram_hits']} "
+          f"disk_hits={st['store_disk_hits']} "
+          f"spills={st['store_spills']} "
+          f"evictions={st['store_evictions']} "
+          f"dropped={st['store_dropped']} "
+          f"corrupt_detected={st['store_corrupt_detected']} "
+          f"write_errors={st['store_write_errors']} "
+          f"io_errors={st['store_io_errors']} "
+          f"snapshot_lost={st['n_snapshot_lost']} "
+          f"recovered_sessions={st['n_recovered_sessions']}")
     if args.inject_faults:
         from repro.serve.request import TERMINAL_STATUSES
         n_terminal = sum(rs.status in TERMINAL_STATUSES
@@ -250,6 +268,26 @@ def main():
                     help="--stream: overload response when max_queue "
                          "requests wait (reject newcomer, or evict the "
                          "worst queued request if outranked)")
+    # --- tiered snapshot store (PR 7, docs/serving.md §Snapshot store) -
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="--stream: disk tier for lane snapshots "
+                         "(np.memmap slab files + JSON manifest; parks "
+                         "and checkpoints write through, and a restart "
+                         "over the same dir recovers parked sessions)")
+    ap.add_argument("--snapshot-host-bytes", type=int, default=0,
+                    help="--stream: host-RAM budget of the snapshot "
+                         "LRU pool in bytes (0 = unlimited); over "
+                         "budget, cold snapshots spill to "
+                         "--snapshot-dir or are dropped with a counter")
+    ap.add_argument("--snap-corrupt-prob", type=float, default=0.0,
+                    help="--inject-faults: per-step probability of "
+                         "flipping one bit in a stored snapshot slab "
+                         "(RAM or at-rest disk file) — finite silent "
+                         "corruption only the checksum can catch")
+    ap.add_argument("--io-error-prob", type=float, default=0.0,
+                    help="--inject-faults: per-step probability of "
+                         "arming a snapshot-store disk fault (write "
+                         "failure or silent truncation)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

@@ -3,7 +3,10 @@ from repro.serve.faults import FaultInjector, poison_lanes
 from repro.serve.request import (TERMINAL_STATUSES, LaneSnapshot, Request,
                                  RequestState, Status)
 from repro.serve.scheduler import Scheduler
+from repro.serve.store import (SnapshotStore, checksum_snapshot,
+                               verify_snapshot)
 
 __all__ = ["Engine", "build_engine", "Request", "RequestState", "Status",
            "Scheduler", "FaultInjector", "poison_lanes", "LaneSnapshot",
-           "TERMINAL_STATUSES"]
+           "TERMINAL_STATUSES", "SnapshotStore", "checksum_snapshot",
+           "verify_snapshot"]

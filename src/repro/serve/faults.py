@@ -14,7 +14,17 @@ Scheduler calls at the top of every step, able to
     timeouts actually fire under test);
   * BURST-SUBMIT oversized / malformed traffic (empty prompts, bad
     max_new, queue-overflowing waves) through the ordinary submit path,
-    exercising validation rejection and load shedding.
+    exercising validation rejection and load shedding;
+  * SILENTLY CORRUPT a stored snapshot (PR 7): flip one seeded bit in
+    a LaneSnapshot slab — the live host-RAM copy, or the at-rest disk
+    file — producing a FINITE corruption NaN detection cannot see;
+    only the store's capture-time crc32 catches it at resume, routing
+    the request through bounded replay instead of emitting wrong
+    tokens;
+  * INJECT IO ERRORS on the snapshot store's disk tier: arm the next
+    slab write to fail outright (OSError, counted and degraded to
+    RAM-only) or to silently truncate (the torn-write case the
+    size/crc verification catches on read).
 
 Every injected fault is drawn from one seeded np.random.Generator, so a
 chaos schedule replays exactly from its seed. The injector's poison
@@ -93,6 +103,13 @@ class FaultInjector:
     burst_invalid_frac: float = 0.25  # fraction of burst requests that
     #                                   are MALFORMED (empty prompt /
     #                                   bad max_new) — must be REJECTED
+    snap_corrupt_prob: float = 0.0  # flip one bit in a stored snapshot
+    #                                 slab (RAM copy or at-rest disk
+    #                                 file) — finite silent corruption,
+    #                                 detectable only by checksum
+    io_error_prob: float = 0.0      # arm a store disk fault: the next
+    #                                 slab write fails (OSError) or
+    #                                 silently truncates (torn write)
 
     def __post_init__(self):
         self.rng = np.random.default_rng(self.seed)
@@ -100,6 +117,9 @@ class FaultInjector:
         self.n_delayed = 0
         self.n_bursts = 0
         self.n_burst_submitted = 0
+        self.n_snap_corrupted_ram = 0
+        self.n_snap_corrupted_disk = 0
+        self.n_io_errors_armed = 0
         self._rid = 1_000_000_000  # burst rid space, clear of user rids
 
     # ------------------------------------------------------------ hooks
@@ -117,6 +137,21 @@ class FaultInjector:
                 self.n_burst_submitted += 1
         if self.corrupt_prob > 0 and self.rng.random() < self.corrupt_prob:
             self._corrupt_one(sched)
+        if (self.snap_corrupt_prob > 0
+                and self.rng.random() < self.snap_corrupt_prob):
+            # host-side bit flip on a stored slab — zero dispatches, so
+            # the exact dispatch formula is untouched; the store's own
+            # chaos helper keeps the corruption model identical to the
+            # unit tests'
+            where = sched.store.chaos_corrupt(self.rng)
+            if where == "ram":
+                self.n_snap_corrupted_ram += 1
+            elif where == "disk":
+                self.n_snap_corrupted_disk += 1
+        if self.io_error_prob > 0 and self.rng.random() < self.io_error_prob:
+            mode = "fail" if self.rng.random() < 0.5 else "truncate"
+            sched.store.chaos_arm_io_error(mode)
+            self.n_io_errors_armed += 1
 
     def _corrupt_one(self, sched) -> None:
         """Poison one random DECODING lane's cache (mid-prefill and

@@ -121,6 +121,45 @@ class Request:
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
 
+    def to_meta(self) -> dict:
+        """JSON-able record of everything needed to reconstruct this
+        request after a process restart — persisted in the snapshot
+        store's manifest alongside a parked session's slab, so a
+        revived-from-disk request can still fall back to
+        recompute-from-prompt (and re-pack its cross memory) if its
+        slab fails verification."""
+        meta = {"rid": int(self.rid),
+                "prompt": [int(t) for t in self.prompt],
+                "max_new": int(self.max_new), "seed": int(self.seed),
+                "eos_id": int(self.eos_id), "arrival": float(self.arrival),
+                "priority": int(self.priority),
+                "deadline_ms": self.deadline_ms,
+                "timeout_ms": self.timeout_ms, "extra_inputs": None}
+        if self.extra_inputs is not None:
+            # float32 -> python float -> float32 is exact (f32 ⊂ f64)
+            meta["extra_inputs"] = {
+                k: {"shape": list(v.shape),
+                    "data": [float(x) for x in v.reshape(-1)]}
+                for k, v in self.extra_inputs.items()}
+        return meta
+
+    @classmethod
+    def from_meta(cls, meta: dict) -> "Request":
+        extra = None
+        if meta.get("extra_inputs") is not None:
+            extra = {k: np.asarray(v["data"], np.float32).reshape(
+                         v["shape"])
+                     for k, v in meta["extra_inputs"].items()}
+        return cls(rid=int(meta["rid"]),
+                   prompt=np.asarray(meta["prompt"], np.int32),
+                   max_new=int(meta["max_new"]), seed=int(meta["seed"]),
+                   eos_id=int(meta["eos_id"]),
+                   arrival=float(meta.get("arrival", 0.0)),
+                   priority=int(meta.get("priority", 0)),
+                   deadline_ms=meta.get("deadline_ms"),
+                   timeout_ms=meta.get("timeout_ms"),
+                   extra_inputs=extra)
+
 
 @dataclasses.dataclass
 class LaneSnapshot:
@@ -136,12 +175,20 @@ class LaneSnapshot:
     makes swap-out preemption, parking, and replay-on-fault affordable.
 
     `n_tokens` records len(RequestState.tokens) at capture so a replay
-    can truncate the host-side stream to the snapshot point."""
+    can truncate the host-side stream to the snapshot point.
+
+    Snapshots live in the Scheduler's `SnapshotStore` (serve.store,
+    PR 7), which stamps `crc`/`meta_crc` at capture — crc32 over the
+    state leaves' bytes in flatten order plus a metadata digest — and
+    verifies them on every fetch, so a silently-corrupted-but-finite
+    slab is detected instead of reviving as wrong tokens."""
     state: dict                      # per-lane sub-state pytree (numpy)
     tok: np.ndarray                  # [] int32 next token to emit/feed
     key: np.ndarray                  # [2] uint32 RNG chain
     n_emitted: int
     n_tokens: int                    # len(rs.tokens) when captured
+    crc: Optional[int] = None        # slab checksum (store.put stamps)
+    meta_crc: Optional[int] = None   # metadata digest
 
 
 @dataclasses.dataclass
@@ -172,8 +219,10 @@ class RequestState:
     #                                     replay) consumed so far
     reason: Optional[str] = None        # why REJECTED / FAILED /
     #                                     TIMED_OUT (None otherwise)
-    snapshot: Optional[LaneSnapshot] = None  # last swap-out / checkpoint
-    #                                     (resume-instead-of-recompute)
+    # NOTE: the request's last swap-out/checkpoint/park snapshot lives
+    # in the Scheduler's SnapshotStore (serve.store), keyed by rid —
+    # NOT here — so snapshots are capacity-accounted, spillable to disk
+    # and checksum-verified instead of pinned on the RequestState.
 
     @property
     def rid(self) -> int:

@@ -99,9 +99,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import transformer as T
 from repro.serve.engine import Engine
 from repro.serve.request import (LaneSnapshot, Request, RequestState,
                                  Status)
+from repro.serve.store import SnapshotStore, state_spec
 
 SCHED_POLICIES = ("fifo", "priority", "edf")
 SHED_POLICIES = ("reject", "evict")
@@ -268,6 +270,9 @@ class Scheduler:
         self.n_timeouts = 0       # requests cancelled by timeout_ms
         self.n_failed = 0         # terminal FAILED after max_retries
         self.n_faults_injected = 0  # injector poison dispatches
+        self.n_snapshot_lost = 0  # snapshots that failed checksum/IO at
+        #                           resume and fell back to
+        #                           recompute-from-prompt (bounded replay)
         # interleaved segments whose prefill drained mid-segment and
         # were split into a mixed part + a pure-decode remainder (each
         # half is its own dispatch and counts in n_segments)
@@ -281,6 +286,47 @@ class Scheduler:
         # basis of the deterministic RequestState.first_emit_step
         self._steps_done = 0
         self._t0 = time.monotonic()
+        # tiered snapshot store (PR 7, serve.store): owns every
+        # LaneSnapshot — LRU host pool accounted against
+        # serve.snapshot_host_bytes, spilling to np.memmap slabs under
+        # serve.snapshot_dir; every snapshot checksummed at capture and
+        # verified at fetch. The expected single-lane leaf spec
+        # (derived WITHOUT allocating, via eval_shape) fences off disk
+        # records written under a different model/budget config.
+        expected = state_spec(jax.eval_shape(
+            lambda: T.init_decode_state(self.cfg, 1, self.serve.budget)))
+        self.store = SnapshotStore(
+            host_bytes=self.serve.snapshot_host_bytes,
+            directory=self.serve.snapshot_dir, expected_spec=expected)
+        # crash-restart: adopt the dir's manifest — every durably
+        # captured session comes back as a PARKED RequestState whose
+        # revive() resumes bit-identically from its on-disk slab
+        self.n_recovered_sessions = 0
+        self._recover_sessions()
+
+    def _recover_sessions(self) -> None:
+        """Replay the snapshot store's manifest (populated when
+        serve.snapshot_dir holds a previous process's state): rebuild
+        each record's Request + PARKED RequestState with its emitted
+        tokens, exactly as if this Scheduler had parked it itself.
+        Records without session metadata, or that fail to rebuild, are
+        skipped — recovery degrades, never crashes."""
+        for record in self.store.recoverable():
+            meta = record.get("request")
+            rid = record.get("rid")
+            if meta is None or rid in self.results:
+                continue
+            try:
+                req = Request.from_meta(meta)
+            except (KeyError, TypeError, ValueError):
+                continue
+            rs = RequestState(request=req, status=Status.PARKED,
+                              submit_seq=self._submit_seq,
+                              submit_sec=self._now())
+            self._submit_seq += 1
+            rs.tokens = [int(t) for t in record.get("tokens", [])]
+            self.results[rid] = rs
+            self.n_recovered_sessions += 1
 
     # ---------------------------------------------------------- queueing
 
@@ -378,16 +424,18 @@ class Scheduler:
 
     # ----------------------------------------------- snapshots (swap-out)
 
-    def _swap_out(self, lanes: List[int]) -> None:
+    def _swap_out(self, lanes: List[int], kind: str = "swap") -> None:
         """ONE extract dispatch gathers the lanes' complete movable
         state (retained KV slab, positions/betas/aux, recurrences,
         cross-memory slab + mem_len, clock) plus carried token and RNG
-        chain to host LaneSnapshots on their RequestStates. O(M) per
-        lane by construction — eviction already compressed each lane to
-        its budget — which is what makes preemption-by-swap, parking
-        and checkpointing affordable. The lane index operand is padded
-        to n_lanes (extras repeat a real lane; only the first k rows
-        are kept) so the closure compiles once."""
+        chain into host LaneSnapshots, handed to the SnapshotStore
+        (checksummed at capture; durable kinds "park"/"checkpoint"
+        write through to the disk tier). O(M) per lane by construction
+        — eviction already compressed each lane to its budget — which
+        is what makes preemption-by-swap, parking and checkpointing
+        affordable. The lane index operand is padded to n_lanes (extras
+        repeat a real lane; only the first k rows are kept) so the
+        closure compiles once."""
         idx = np.full(self.n_lanes, lanes[0], np.int32)
         idx[: len(lanes)] = lanes
         self.eng.dispatch_count += 1
@@ -397,28 +445,33 @@ class Scheduler:
                           jnp.asarray(idx)))
         for i, lane in enumerate(lanes):
             rs = self.lane_req[lane]
-            rs.snapshot = LaneSnapshot(
+            snap = LaneSnapshot(
                 state=_snap_row(sub, i), tok=toks[i], key=keys[i],
                 n_emitted=int(self.n_emitted[lane]),
                 n_tokens=len(rs.tokens))
+            self.store.put(rs.rid, snap,
+                           request_meta=rs.request.to_meta(),
+                           tokens=rs.tokens, kind=kind)
 
-    def _resume_lanes(self, batch: List[Tuple[RequestState, int]]) -> None:
-        """ONE resume dispatch scatters k host LaneSnapshots back into
-        lanes — the restored lanes are bit-identical to never having
-        left the device, so the request continues its exact token
-        stream (parity oracle in tests/test_faults.py). Host-side
+    def _resume_lanes(
+            self,
+            batch: List[Tuple[RequestState, LaneSnapshot, int]]) -> None:
+        """ONE resume dispatch scatters k verified host LaneSnapshots
+        (fetched from the store by _take_admissions — RAM or disk tier)
+        back into lanes — the restored lanes are bit-identical to never
+        having left the device, so the request continues its exact
+        token stream (parity oracle in tests/test_faults.py). Host-side
         stream/bookkeeping is rolled back to the snapshot point
         (tokens truncated to snapshot.n_tokens — a no-op on a plain
         swap-out, a real rollback on fault replay)."""
-        k = len(batch)
-        rows = [rs.snapshot.state for rs, _ in batch]
+        rows = [snap.state for _, snap, _ in batch]
         sub = _stack_rows(rows, self.n_lanes)
         sub_tok = np.zeros((self.n_lanes,), np.int32)
         sub_keys = np.zeros((self.n_lanes, 2), np.uint32)
         lane_idx = np.full(self.n_lanes, self.n_lanes, np.int32)
-        for i, (rs, lane) in enumerate(batch):
-            sub_tok[i] = rs.snapshot.tok
-            sub_keys[i] = rs.snapshot.key
+        for i, (rs, snap, lane) in enumerate(batch):
+            sub_tok[i] = snap.tok
+            sub_keys[i] = snap.key
             lane_idx[i] = lane
         self.eng.dispatch_count += 1
         self.n_resumes += 1
@@ -427,8 +480,7 @@ class Scheduler:
             jax.tree.map(jnp.asarray, sub), jnp.asarray(sub_tok),
             jnp.asarray(sub_keys), jnp.asarray(lane_idx))
         now = self._now()
-        for rs, lane in batch:
-            snap = rs.snapshot
+        for rs, snap, lane in batch:
             rs.status, rs.lane = Status.RUNNING, lane
             if rs.admit_sec is None:
                 rs.admit_sec = now
@@ -439,7 +491,6 @@ class Scheduler:
             self.n_emitted[lane] = snap.n_emitted
             self.max_new[lane] = rs.request.max_new
             self.eos[lane] = rs.request.eos_id
-        del k
 
     def park(self, rid: int) -> RequestState:
         """Swap a RUNNING (decoding) request out on purpose: its lane
@@ -454,7 +505,7 @@ class Scheduler:
         if self.lane_prefill[lane] is not None:
             raise ValueError(f"request {rid} is still prefilling; "
                              f"park applies to decoding lanes")
-        self._swap_out([lane])
+        self._swap_out([lane], kind="park")
         mask = np.zeros(self.n_lanes, bool)
         mask[lane] = True
         self.eng.dispatch_count += 1
@@ -542,7 +593,7 @@ class Scheduler:
             rs.status, rs.lane = Status.QUEUED, -1
             if lane not in swapped:
                 # recompute path: discard progress, restart from scratch
-                rs.snapshot = None
+                self.store.drop(rs.rid)
                 rs.admit_sec = rs.first_token_sec = None
                 rs.first_emit_step = None
                 rs.tokens.clear()
@@ -561,8 +612,11 @@ class Scheduler:
         queued ones leave the queue with no dispatch; running ones free
         their lanes with one vectorized reset. Terminal status
         TIMED_OUT either way — a stuck or starved request can never pin
-        a lane (or the queue) forever. PARKED requests are exempt:
-        parking is an explicit caller decision."""
+        a lane (or the queue) forever. PARKED requests are exempt by
+        default (serve.park_exempts_timeout=True: parking is an
+        explicit caller decision, and an idle parked session may far
+        outlive any per-request SLO); with the knob False they expire
+        too — zero dispatches, snapshots released from every tier."""
         now = self._now()
 
         def expired(rs):
@@ -574,7 +628,17 @@ class Scheduler:
             rs.status, rs.finish_sec = Status.TIMED_OUT, now
             rs.reason = (f"exceeded timeout_ms="
                          f"{rs.request.timeout_ms} while queued")
+            self.store.drop(rs.rid)
             self.n_timeouts += 1
+        if not self.serve.park_exempts_timeout:
+            parked = [rs for rs in self.results.values()
+                      if rs.status is Status.PARKED and expired(rs)]
+            for rs in parked:
+                rs.status, rs.finish_sec = Status.TIMED_OUT, now
+                rs.reason = (f"exceeded timeout_ms="
+                             f"{rs.request.timeout_ms} while parked")
+                self.store.drop(rs.rid)
+                self.n_timeouts += 1
         lanes = [l for l, rs in enumerate(self.lane_req)
                  if rs is not None and expired(rs)]
         if not lanes:
@@ -589,6 +653,7 @@ class Scheduler:
             rs.status, rs.finish_sec, rs.lane = Status.TIMED_OUT, now, -1
             rs.reason = (f"exceeded timeout_ms={rs.request.timeout_ms} "
                          f"while running")
+            self.store.drop(rs.rid)
             self.n_timeouts += 1
             self.lane_req[lane] = None
             self.lane_prefill[lane] = None
@@ -638,20 +703,67 @@ class Scheduler:
             return []
         return free
 
-    def _take_admissions(self) -> Tuple[List[Tuple[RequestState, int]],
-                                        List[Tuple[RequestState, int]]]:
+    def _snapshot_lost(self, rs: RequestState) -> bool:
+        """A stored snapshot failed verification (checksum mismatch,
+        torn disk write, IO error) at resume time — the SILENT
+        corruption case NaN detection can't see. Route it through the
+        same bounded-replay budget as quarantine: recompute from the
+        prompt (deterministic seeds regenerate the identical stream)
+        unless the request exhausted max_retries, then terminal FAILED.
+        Returns True if the request survives (recompute), False if it
+        was failed terminally."""
+        self.store.drop(rs.rid)
+        self.n_snapshot_lost += 1
+        rs.n_retries += 1
+        if rs.n_retries > self.serve.max_retries:
+            rs.status, rs.finish_sec = Status.FAILED, self._now()
+            rs.reason = ("snapshot failed integrity verification and "
+                         f"replay budget ({self.serve.max_retries}) "
+                         "is exhausted")
+            self.n_failed += 1
+            return False
+        rs.tokens.clear()
+        rs.admit_sec = rs.first_token_sec = None
+        rs.first_emit_step = None
+        return True
+
+    def _take_admissions(self) -> Tuple[
+            List[Tuple[RequestState, LaneSnapshot, int]],
+            List[Tuple[RequestState, int]]]:
         """Pop up to len(free) queued requests in _order_key order and
         split them into (resume, fresh) lane assignments — requests
-        holding a LaneSnapshot (swap-preempted victims, revived parks,
-        fault replays with a checkpoint) resume instead of
-        re-prefilling."""
+        with a stored LaneSnapshot (swap-preempted victims, revived
+        parks, fault replays with a checkpoint) resume instead of
+        re-prefilling. Every snapshot is FETCHED AND VERIFIED here
+        (store.get recomputes the capture checksums; disk copies are
+        read + verified); a failed verification demotes the request to
+        the fresh (recompute) list via _snapshot_lost, or fails it
+        terminally once out of retries — corruption can cost a lane
+        slot this round, never a crash."""
         free = self._claim_lanes()
         k = min(len(free), len(self.queue))
         batch = [self._pop_next() for _ in range(k)]
-        resume = [rs for rs in batch if rs.snapshot is not None]
-        fresh = [rs for rs in batch if rs.snapshot is None]
+        resume, fresh = [], []
+        for rs in batch:
+            if self.store.has(rs.rid):
+                snap = self.store.get(rs.rid)
+                if snap is not None:
+                    resume.append((rs, snap))
+                    continue
+                if not self._snapshot_lost(rs):
+                    continue             # terminal FAILED: lane unused
+            elif rs.tokens:
+                # the store dropped this snapshot for CAPACITY (RAM
+                # pressure with no disk tier) — not corruption, so no
+                # retry is burned: roll the host stream back to the
+                # prompt and recompute (deterministic seeds regenerate
+                # the identical tokens)
+                rs.tokens.clear()
+                rs.admit_sec = rs.first_token_sec = None
+                rs.first_emit_step = None
+            fresh.append(rs)
         lanes = iter(free)
-        return ([(rs, next(lanes)) for rs in resume],
+        return ([(rs, snap, next(lanes)) for rs, snap in resume],
                 [(rs, next(lanes)) for rs in fresh])
 
     def _admit(self) -> int:
@@ -859,13 +971,16 @@ class Scheduler:
                 rs.status, rs.finish_sec = Status.FAILED, now
                 rs.reason = (f"non-finite outputs persisted after "
                              f"{self.serve.max_retries} replays")
+                self.store.drop(rs.rid)
                 self.n_failed += 1
                 continue
             rs.status = Status.QUEUED
-            if rs.snapshot is not None:
-                # replay from the last checkpoint: roll the host-side
-                # stream back to the snapshot point
-                del rs.tokens[rs.snapshot.n_tokens:]
+            n_tok = self.store.peek_n_tokens(rs.rid)
+            if n_tok is not None:
+                # replay from the last stored checkpoint: roll the
+                # host-side stream back to the snapshot point (the slab
+                # itself is verified when admission fetches it)
+                del rs.tokens[n_tok:]
             else:
                 # no checkpoint: recompute from scratch
                 rs.tokens.clear()
@@ -926,6 +1041,7 @@ class Scheduler:
             if not self.active[lane] and self.lane_prefill[lane] is None:
                 rs.status, rs.finish_sec, rs.lane = Status.DONE, now, -1
                 self.lane_req[lane] = None
+                self.store.drop(rs.rid)  # release snapshots, every tier
                 finished.append(rs)
                 retired_lanes.append(lane)
         self._steps_done += n_steps
@@ -946,8 +1062,10 @@ class Scheduler:
                         and self.active[l]]
             if decoding:
                 # periodic checkpoint: fault replay resumes from here
-                # instead of recomputing the whole request
-                self._swap_out(decoding)
+                # instead of recomputing the whole request (durable
+                # kind: written through to the disk tier when
+                # serve.snapshot_dir is set — crash-restart material)
+                self._swap_out(decoding, kind="checkpoint")
         return finished
 
     # --------------------------------------------------------- top level
@@ -976,7 +1094,7 @@ class Scheduler:
         """Supervision / dispatch counters (the stream launcher prints
         these, and the chaos suite asserts on them — degradation must
         be observable, not silent)."""
-        return {
+        out = {
             "n_prefill_rounds": self.n_prefill_rounds,
             "n_segments": self.n_segments,
             "n_segment_splits": self.n_segment_splits,
@@ -990,7 +1108,13 @@ class Scheduler:
             "n_failed": self.n_failed,
             "n_faults_injected": self.n_faults_injected,
             "n_retries": sum(rs.n_retries for rs in self.results.values()),
+            "n_snapshot_lost": self.n_snapshot_lost,
+            "n_recovered_sessions": self.n_recovered_sessions,
         }
+        # snapshot tier counters (serve.store) — hits/spills/corruption
+        # detection/IO degradation, prefixed to keep one flat namespace
+        out.update({f"store_{k}": v for k, v in self.store.stats().items()})
+        return out
 
     def run(self, requests: Iterable[Request] = (),
             respect_arrivals: bool = False) -> Dict[int, RequestState]:
@@ -1015,4 +1139,7 @@ class Scheduler:
                     break
                 self.submit(pending.pop())
             self.step()
+        # drain the snapshot writer: parked/checkpointed sessions are
+        # durably on disk when the drain returns (crash-restart safety)
+        self.store.flush()
         return self.results

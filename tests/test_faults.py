@@ -30,6 +30,12 @@ Claims under test (docs/serving.md §Fault tolerance):
   6. Drain-split decode remainders run in power-of-two buckets (tail
      masked bit-identically), so the remainder closure cold-compiles
      O(log2 decode_segment) times, not once per distinct length.
+  7. Snapshot store under attack (docs/serving.md §Snapshot store):
+     silent slab bit-flips and armed disk IO errors never crash the
+     loop and never leak into the stream — checksums catch FINITE
+     corruption at resume and route it through the same bounded
+     replay; clean traffic NEVER trips a checksum (zero false
+     positives); PARKED requests respect serve.park_exempts_timeout.
 """
 import dataclasses
 import time
@@ -320,7 +326,7 @@ def test_checkpoint_replay_resumes_not_recomputes(tiny):
     sched.submit(req)
     sched.step()
     sched.step()                        # checkpoints after each segment
-    assert sched.results[0].snapshot is not None
+    assert sched.store.has(0)           # checkpoint lives in the store
     kept = len(sched.results[0].tokens)
     inj.corrupt_prob = 1.0
     sched.step()                        # poison -> quarantine -> replay
@@ -365,6 +371,63 @@ def test_timeouts_queued_and_running(tiny):
     assert res[1].admit_sec is None     # never touched a lane
     assert res[2].status is Status.DONE
     assert sched.n_timeouts == 2 and eng.dispatch_count > before
+    assert eng.dispatch_count == (
+        sched.n_prefill_rounds + sched.n_segments + sched.n_resets +
+        sched.n_swaps + sched.n_resumes)
+
+
+def test_parked_timeout_exempt_by_default(tiny):
+    """serve.park_exempts_timeout=True (the default): a PARKED request
+    outlives its timeout_ms indefinitely — parking is an explicit
+    caller decision, and an idle parked session may far outlive any
+    per-request SLO. The exemption covers ONLY the parked span: once
+    revived the request is back under its wall clock (here long
+    expired, so it times out while queued — no free pass)."""
+    cfg, params, gates = tiny
+    req = _requests([9], [8], timeout_ms=[5])[0]
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=2, budget=16, prefill_chunk=8)
+    sched = Scheduler(eng, n_lanes=1)
+    sched.submit(req)
+    sched.step()
+    sched.park(0)
+    time.sleep(0.02)                    # well past timeout_ms=5
+    for _ in range(3):
+        sched.step()                    # _expire_timeouts runs here
+        assert sched.results[0].status is Status.PARKED   # exempt
+    assert sched.n_timeouts == 0
+    sched.revive(0)                     # back in play -> clock applies
+    res = sched.run()
+    assert res[0].status is Status.TIMED_OUT
+    assert "while queued" in res[0].reason
+
+
+def test_parked_timeout_enforced_when_knob_off(tiny):
+    """serve.park_exempts_timeout=False: a PARKED request whose wall
+    clock exceeds timeout_ms goes terminal TIMED_OUT ("while parked"),
+    its snapshot is released from every store tier, and expiry costs
+    ZERO dispatches — the lane was already free."""
+    cfg, params, gates = tiny
+    req = _requests([9], [8], timeout_ms=[5])[0]
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=2, budget=16, prefill_chunk=8,
+                       park_exempts_timeout=False)
+    sched = Scheduler(eng, n_lanes=1)
+    sched.submit(req)
+    sched.step()
+    sched.park(0)
+    assert sched.store.has(0)
+    time.sleep(0.02)
+    before = eng.dispatch_count
+    sched.step()
+    assert sched.results[0].status is Status.TIMED_OUT
+    assert "while parked" in sched.results[0].reason
+    assert sched.n_timeouts == 1
+    assert eng.dispatch_count == before          # zero-dispatch expiry
+    sched.store.flush()
+    assert not sched.store.has(0)                # snapshot released
+    with pytest.raises(ValueError, match="not parked"):
+        sched.revive(0)
     assert eng.dispatch_count == (
         sched.n_prefill_rounds + sched.n_segments + sched.n_resets +
         sched.n_swaps + sched.n_resumes)
@@ -462,9 +525,11 @@ def test_decode_remainders_bucket_to_pow2(tiny):
 # ------------------------------------------------------- liveness oracle
 
 
-def _chaos_run(tiny, seed):
+def _chaos_run(tiny, seed, *, snapshot_dir=None, store_chaos=False):
     """One seeded chaos schedule: corrupt + delay + burst faults over a
     preemptible priority workload with timeouts and a tight queue.
+    With store_chaos, silent snapshot bit-flips and armed disk IO
+    errors join the schedule (snapshot_dir enables the disk tier).
     Returns (scheduler, engine, user requests)."""
     cfg, params, gates = tiny
     reqs = _requests([9, 7, 12, 5, 8], [8, 4, 6, 5, 4],
@@ -472,11 +537,14 @@ def _chaos_run(tiny, seed):
                      timeout_ms=[None, 30_000, None, 30_000, None])
     inj = FaultInjector(seed=seed, corrupt_prob=0.25, delay_prob=0.2,
                         delay_sec=0.002, burst_prob=0.5, burst_size=6,
-                        max_bursts=3, burst_invalid_frac=0.3)
+                        max_bursts=3, burst_invalid_frac=0.3,
+                        snap_corrupt_prob=0.5 if store_chaos else 0.0,
+                        io_error_prob=0.3 if store_chaos else 0.0)
     eng = build_engine(cfg, params, gates, policy="trimkv",
                        decode_segment=2, budget=16, prefill_chunk=8,
                        sched_policy="priority", max_queue=4,
-                       max_retries=1, checkpoint_every=2)
+                       max_retries=1, checkpoint_every=2,
+                       snapshot_dir=snapshot_dir)
     sched = Scheduler(eng, n_lanes=2, injector=inj)
     for r in reqs:
         sched.submit(r)
@@ -515,6 +583,39 @@ def test_liveness_under_random_fault_schedule(tiny, seed):
     sched, eng, reqs = _chaos_run(tiny, seed)
     _assert_liveness(sched, eng, reqs)
     assert sched.injector.n_burst_submitted > 0   # chaos actually flowed
+    # nobody corrupted any snapshot -> the capture-time checksums must
+    # NEVER fire on clean traffic (zero false positives), even though
+    # checkpoints flowed through the store all run long
+    stats = sched.stats()
+    assert stats["store_puts"] > 0                # store really in play
+    assert stats["store_corrupt_detected"] == 0
+    assert stats["n_snapshot_lost"] == 0
+    for r in reqs:
+        rs = sched.results[r.rid]
+        if rs.status is Status.DONE:
+            want = _oneshot(cfg, params, gates, r, policy="trimkv",
+                            budget=16, prefill_chunk=8)
+            np.testing.assert_array_equal(rs.ids, want,
+                                          err_msg=f"rid={r.rid}")
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_liveness_under_store_chaos(tiny, tmp_path, seed):
+    """Liveness with the snapshot store itself under attack: silent
+    slab bit-flips (RAM and at-rest disk) and armed disk IO errors
+    (failed + torn writes) join the schedule. Every request still
+    reaches one terminal status, the dispatch formula stays exact
+    (store faults are host-side: zero dispatches), and any DONE
+    request is STILL token-identical to one-shot — detected corruption
+    routes through bounded replay, never into the output stream."""
+    cfg, params, gates = tiny
+    sched, eng, reqs = _chaos_run(tiny, seed,
+                                  snapshot_dir=str(tmp_path / "snap"),
+                                  store_chaos=True)
+    _assert_liveness(sched, eng, reqs)
+    inj = sched.injector
+    assert (inj.n_snap_corrupted_ram + inj.n_snap_corrupted_disk
+            + inj.n_io_errors_armed) > 0          # chaos actually landed
     for r in reqs:
         rs = sched.results[r.rid]
         if rs.status is Status.DONE:

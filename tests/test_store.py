@@ -1,0 +1,473 @@
+"""Tiered snapshot store suite (PR 7 durability + integrity).
+
+Claims under test (docs/serving.md §Snapshot store):
+  1. Checksum round-trip: capture-time crc32 (slab) + metadata digest
+     verify clean on every get — RAM or disk — with ZERO false
+     positives over many seeded clean cycles; flipping any single bit
+     in a stored slab (RAM copy or at-rest file) is ALWAYS detected
+     and surfaces as a structured miss, never as wrong bytes.
+  2. Serialization: flatten-order slab round-trips the decode-state
+     pytree bit-exactly, including the two leafless edge shapes a
+     config can legally produce (layers=None, tail=()) — the rebuilt
+     treedef matches the live one exactly.
+  3. Tiering: an LRU host pool accounted in bytes spills cold entries
+     to memmap slab files and promotes on access; with no disk tier
+     the coldest entry is dropped (counted), and a miss just means
+     recompute-from-prompt.
+  4. Crash-restart: a new store over the same directory replays the
+     manifest; records whose slab is torn (truncated) are skipped
+     with a counter, never wedging the restart. A restarted Scheduler
+     turns recovered records back into PARKED sessions whose revival
+     is BIT-IDENTICAL to one-shot — across every eviction policy and
+     both attention impls.
+  5. Degradation: injected IO errors (failed write, torn write) and
+     detected corruption degrade to counters + recompute via the
+     PR-6 bounded-replay budget — terminal FAILED only once
+     max_retries is exhausted. The store never raises into the loop.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.serve import (LaneSnapshot, Request, Scheduler, SnapshotStore,
+                         Status, build_engine, checksum_snapshot,
+                         verify_snapshot)
+from repro.serve.store import (flatten_state, rebuild_state,
+                               snapshot_nbytes, state_spec)
+
+ALL_POLICIES = ["trimkv", "streaming_llm", "h2o", "snapkv", "rkv",
+                "keydiff", "full"]
+
+
+# ------------------------------------------------------- synthetic snaps
+
+
+def _snap(seed, *, layers=True, tail=True, scale=1):
+    """A LaneSnapshot over a synthetic decode-state-shaped pytree:
+    {"t", "layers" (tuple of per-group dicts | None), "tail" (tuple)}.
+    layers=False/tail=False exercise the two leafless subtree shapes."""
+    rng = np.random.RandomState(seed)
+    mk = lambda *s: rng.randn(*s).astype(np.float32)
+    state = {
+        "t": np.asarray([rng.randint(0, 100)], np.int32),
+        "layers": (
+            ({"k": mk(2, 1, 4, 8 * scale), "v": mk(2, 1, 4, 8 * scale),
+              "pos": rng.randint(-1, 9, (2, 1, 4)).astype(np.int32)},)
+            if layers else None),
+        "tail": (({"h": mk(1, 16), "c": mk(1, 3, 16)},) if tail else ()),
+    }
+    return LaneSnapshot(state=state, tok=np.int32(rng.randint(0, 64)),
+                        key=rng.randint(0, 2**31, 2).astype(np.uint32),
+                        n_emitted=int(rng.randint(0, 9)),
+                        n_tokens=int(rng.randint(0, 9)))
+
+
+def _assert_snap_equal(a, b):
+    la = jax.tree_util.tree_flatten_with_path(a.state)
+    lb = jax.tree_util.tree_flatten_with_path(b.state)
+    assert la[1] == lb[1], "treedef drift through the store"
+    for (pa, xa), (_, xb) in zip(la[0], lb[0]):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb),
+                                      err_msg=str(pa))
+        assert np.asarray(xa).dtype == np.asarray(xb).dtype
+    assert int(a.tok) == int(b.tok)
+    np.testing.assert_array_equal(a.key, b.key)
+    assert a.n_emitted == b.n_emitted and a.n_tokens == b.n_tokens
+
+
+# --------------------------------------------------- checksum round-trip
+
+
+@pytest.mark.parametrize("layers,tail", [(True, True), (False, True),
+                                         (True, False)])
+def test_flatten_rebuild_round_trip(layers, tail):
+    """rebuild_state(flatten_state(s)) is treedef- and bit-exact,
+    including the leafless subtrees flatten silently drops: layers=None
+    and the EMPTY tail tuple (every layer in the repeated group)."""
+    snap = _snap(3, layers=layers, tail=tail)
+    flat = flatten_state(snap.state)
+    rebuilt = rebuild_state([p for p, _ in flat], [l for _, l in flat],
+                            has_layers=layers)
+    assert (jax.tree_util.tree_structure(rebuilt)
+            == jax.tree_util.tree_structure(snap.state))
+    for (_, a), (_, b) in zip(flat, flatten_state(rebuilt)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_checksum_zero_false_positives_many_clean_cycles():
+    """N seeded clean capture->verify cycles, through put/get and a
+    manual restamp: the checksum NEVER fires on untouched bytes."""
+    store = SnapshotStore()
+    for seed in range(24):
+        snap = _snap(seed)
+        crc, meta = checksum_snapshot(snap)
+        assert (crc, meta) == checksum_snapshot(snap)  # deterministic
+        store.put(seed, snap)
+        got = store.get(seed)
+        assert got is snap and verify_snapshot(got)
+    assert store.stats()["corrupt_detected"] == 0
+    assert store.stats()["ram_hits"] == 24
+
+
+def test_unstamped_snapshot_fails_closed():
+    assert not verify_snapshot(_snap(0))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_single_bit_flip_always_detected_in_ram(seed):
+    """chaos_corrupt flips ONE seeded bit in the resident copy; crc32
+    detects every single-bit error, so get() must return None (miss +
+    counter), never the corrupted snapshot."""
+    store = SnapshotStore()
+    store.put(0, _snap(seed))
+    assert store.chaos_corrupt(np.random.default_rng(seed)) == "ram"
+    assert store.get(0) is None
+    st = store.stats()
+    assert st["corrupt_detected"] == 1 and st["chaos_corrupted"] == 1
+    assert not store.has(0)              # discarded from every tier
+    assert store.get(0) is None and store.stats()["misses"] == 1
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_single_bit_flip_always_detected_at_rest(tmp_path, seed):
+    """Same guarantee for the at-rest disk file: flip a bit in the slab,
+    restart the store (disk-only entry), get -> detected miss."""
+    d = str(tmp_path)
+    store = SnapshotStore(directory=d)
+    store.put(0, _snap(seed), kind="park")
+    store.flush()
+    store2 = SnapshotStore(directory=d)
+    assert store2.stats()["recovered"] == 1
+    assert store2.chaos_corrupt(np.random.default_rng(seed)) == "disk"
+    assert store2.get(0) is None
+    assert store2.stats()["corrupt_detected"] == 1
+
+
+def test_disk_round_trip_bit_exact(tmp_path):
+    """park -> flush -> fresh store over the dir -> get: the recovered
+    snapshot is bit-identical (leaves, dtypes, treedef, scalars) and
+    carries verified checksums."""
+    d = str(tmp_path)
+    store = SnapshotStore(directory=d)
+    snap = _snap(7)
+    store.put(5, snap, request_meta={"rid": 5}, tokens=(1, 2, 3),
+              kind="park")
+    store.flush()
+    store2 = SnapshotStore(directory=d)
+    recs = store2.recoverable()
+    assert [r["rid"] for r in recs] == [5]
+    assert recs[0]["tokens"] == [1, 2, 3] and recs[0]["request"] == {"rid": 5}
+    assert store2.peek_n_tokens(5) == snap.n_tokens
+    got = store2.get(5)
+    assert got is not None and verify_snapshot(got)
+    _assert_snap_equal(got, snap)
+    assert store2.stats()["disk_hits"] == 1
+
+
+# ------------------------------------------------------ LRU spill/promote
+
+
+def test_lru_spill_promote_ordering(tmp_path):
+    """With a byte budget that fits exactly two snapshots, the COLDEST
+    entry spills to disk (RAM copy freed once the write lands) and a
+    get() on a spilled rid promotes it back — displacing the new
+    coldest. Access order, not insertion order, decides residency."""
+    one = snapshot_nbytes(_snap(0))
+    store = SnapshotStore(host_bytes=2 * one, directory=str(tmp_path))
+    snaps = {r: _snap(10 + r) for r in range(3)}
+    for r in range(3):
+        store.put(r, snaps[r])           # kind="swap": spill on pressure
+        store.flush()                    # let the write land...
+        store.put(r, snaps[r])           # ...then re-enforce the budget
+    store.flush()
+    st = store.stats()
+    assert st["spills"] >= 1 and st["evictions"] >= 1
+    assert st["ram_bytes"] <= 2 * one
+    # rid 0 was coldest -> its RAM copy is gone, disk copy serves
+    got = store.get(0)
+    assert got is not None
+    _assert_snap_equal(got, snaps[0])
+    assert store.stats()["disk_hits"] == 1
+    # promotion made rid 0 hottest; rid 1 is now coldest and evicted
+    store.flush()
+    store.put(99, _snap(99))
+    store.flush()
+    store.put(99, _snap(99))
+    store.flush()
+    assert store.get(1) is not None      # still reachable (disk)
+    _assert_snap_equal(store.get(1), snaps[1])
+    assert store.stats()["corrupt_detected"] == 0   # all of it clean
+
+
+def test_no_disk_tier_drops_coldest():
+    """RAM-only store under pressure: the coldest snapshot is dropped
+    outright (counted) and its get() is a miss — graceful degradation,
+    the request recomputes from its prompt."""
+    one = snapshot_nbytes(_snap(0))
+    store = SnapshotStore(host_bytes=2 * one)
+    for r in range(3):
+        store.put(r, _snap(r))
+    st = store.stats()
+    assert st["dropped"] == 1 and st["entries"] == 2
+    assert store.get(0) is None and store.stats()["misses"] == 1
+    assert store.get(2) is not None
+
+
+# ------------------------------------------------------ restart recovery
+
+
+def test_restart_skips_truncated_slab(tmp_path):
+    """Crash mid-write: one slab on disk is TORN (half its recorded
+    size). Restart adopts the intact record, skips the torn one with a
+    counter, and never raises."""
+    d = str(tmp_path)
+    store = SnapshotStore(directory=d)
+    store.put(0, _snap(0), kind="park")
+    store.put(1, _snap(1), kind="park")
+    store.flush()
+    slab = os.path.join(d, "snap_1.bin")
+    with open(slab, "r+b") as f:
+        f.truncate(os.path.getsize(slab) // 2)
+    store2 = SnapshotStore(directory=d)
+    st = store2.stats()
+    assert st["recovered"] == 1 and st["recover_skipped"] == 1
+    assert store2.has(0) and not store2.has(1)
+    assert store2.get(0) is not None
+
+
+def test_restart_skips_unparsable_manifest(tmp_path):
+    d = str(tmp_path)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        f.write("{ not json")
+    store = SnapshotStore(directory=d)
+    assert store.stats()["io_errors"] == 1
+    assert store.stats()["entries"] == 0      # degraded, not crashed
+
+
+def test_restart_fences_alien_spec(tmp_path):
+    """A disk record captured under a DIFFERENT model/serve config is
+    refused at read time (spec mismatch counter), not resurrected into
+    an incompatible lane."""
+    d = str(tmp_path)
+    store = SnapshotStore(directory=d)
+    store.put(0, _snap(0), kind="park")
+    store.flush()
+    alien = state_spec(_snap(0, scale=2).state)
+    store2 = SnapshotStore(directory=d, expected_spec=alien)
+    assert store2.stats()["recovered"] == 1   # manifest adopts lazily
+    assert store2.get(0) is None              # ...but read refuses it
+    assert store2.stats()["spec_mismatch"] == 1
+
+
+def test_injected_io_errors_degrade_to_counters(tmp_path):
+    """Armed write faults: "fail" raises inside the writer (counted,
+    RAM copy stays sole and still serves); "truncate" lands half the
+    bytes silently — the torn file is caught by the size check on the
+    NEXT restart. Neither ever raises into the caller."""
+    d = str(tmp_path)
+    store = SnapshotStore(directory=d)
+    store.chaos_arm_io_error("fail")
+    snap = _snap(0)
+    store.put(0, snap, kind="park")
+    store.flush()
+    assert store.stats()["write_errors"] == 1
+    assert store.get(0) is snap               # RAM copy unaffected
+    store.chaos_arm_io_error("truncate")
+    store.put(1, _snap(1), kind="park")
+    store.flush()
+    assert store.stats()["write_errors"] == 1  # torn write went "fine"
+    store2 = SnapshotStore(directory=d)
+    assert not store2.has(1)                  # size check catches it
+    assert store2.stats()["recover_skipped"] >= 1
+
+
+# --------------------------------------------- end-to-end serving parity
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(
+        get_smoke_config("trimkv-paper-4b"), num_layers=2, d_model=64,
+        d_ff=128, num_heads=4, num_kv_heads=2, vocab_size=64,
+        gate_bias_init=3.0)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    gates = T.init_gate_params(jax.random.PRNGKey(1), cfg)
+    return cfg, params, gates
+
+
+def _req(seed=0, n=9, max_new=10):
+    rng = np.random.RandomState(7)
+    return Request(rid=0, prompt=rng.randint(0, 64, size=n).astype(np.int32),
+                   max_new=max_new, seed=seed)
+
+
+def _oneshot(cfg, params, gates, req, *, policy, attn_impl="xla"):
+    eng = build_engine(cfg, params, gates, policy=policy,
+                       attn_impl=attn_impl, budget=16, prefill_chunk=8)
+    return eng.generate(req.prompt[None], req.max_new, chunked=True,
+                        greedy=True, seed=req.seed)["ids"][0]
+
+
+@pytest.mark.parametrize("attn_impl", ["xla", "pallas"])
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_park_restart_revive_parity(tiny, tmp_path, policy, attn_impl):
+    """The durability oracle: park mid-generation -> flush -> simulate
+    a crash by constructing a FRESH Scheduler over the same directory
+    -> the manifest resurrects the session PARKED -> revive serves it
+    from the disk tier -> the final stream is token-identical to the
+    uninterrupted one-shot run. Every eviction policy, both attention
+    impls."""
+    cfg, params, gates = tiny
+    req = _req()
+    want = _oneshot(cfg, params, gates, req, policy=policy,
+                    attn_impl=attn_impl)
+    eng = build_engine(cfg, params, gates, policy=policy,
+                       attn_impl=attn_impl, budget=16, prefill_chunk=8,
+                       decode_segment=2, snapshot_dir=str(tmp_path))
+    sched = Scheduler(eng, n_lanes=1)
+    sched.submit(req)
+    for _ in range(3):
+        sched.step()                     # mid-generation
+    sched.park(0)
+    sched.store.flush()                  # durable capture fully landed
+
+    sched2 = Scheduler(eng, n_lanes=1)   # "restart": fresh everything
+    assert sched2.n_recovered_sessions == 1
+    rs = sched2.results[0]
+    assert rs.status is Status.PARKED
+    assert rs.tokens == sched.results[0].tokens[:len(rs.tokens)]
+    sched2.revive(0)
+    res = sched2.run()
+    assert res[0].status is Status.DONE
+    np.testing.assert_array_equal(res[0].ids, want)
+    stats = sched2.stats()
+    assert stats["store_disk_hits"] >= 1          # really served from disk
+    assert stats["store_corrupt_detected"] == 0   # and verified clean
+    assert eng.dispatch_count == (
+        sched.n_prefill_rounds + sched.n_segments + sched.n_resets +
+        sched.n_swaps + sched.n_resumes +
+        sched2.n_prefill_rounds + sched2.n_segments + sched2.n_resets +
+        sched2.n_swaps + sched2.n_resumes)
+
+
+def test_interleaved_restart_revive_parity(tiny, tmp_path):
+    """The same durability oracle under interleaved admission (fused
+    prefill/decode): restart + revive-from-disk stays bit-identical."""
+    cfg, params, gates = tiny
+    req = _req()
+    want = _oneshot(cfg, params, gates, req, policy="trimkv")
+    eng = build_engine(cfg, params, gates, policy="trimkv", budget=16,
+                       prefill_chunk=8, decode_segment=2,
+                       snapshot_dir=str(tmp_path))
+    sched = Scheduler(eng, n_lanes=1, interleaved=True)
+    sched.submit(req)
+    for _ in range(3):
+        sched.step()
+    sched.park(0)
+    sched.store.flush()
+    sched2 = Scheduler(eng, n_lanes=1, interleaved=True)
+    assert sched2.n_recovered_sessions == 1
+    sched2.revive(0)
+    res = sched2.run()
+    assert res[0].status is Status.DONE
+    np.testing.assert_array_equal(res[0].ids, want)
+
+
+def test_corrupted_disk_snapshot_recovers_via_replay(tiny, tmp_path):
+    """Silent at-rest corruption end-to-end: park -> flip one byte in
+    the slab file -> restart -> revive. The checksum catches it at
+    resume, the request recomputes from its prompt through the bounded
+    replay budget, and the output is STILL token-identical — wrong
+    bytes never reach the stream."""
+    cfg, params, gates = tiny
+    req = _req()
+    want = _oneshot(cfg, params, gates, req, policy="trimkv")
+    eng = build_engine(cfg, params, gates, policy="trimkv", budget=16,
+                       prefill_chunk=8, decode_segment=2, max_retries=1,
+                       snapshot_dir=str(tmp_path))
+    sched = Scheduler(eng, n_lanes=1)
+    sched.submit(req)
+    for _ in range(3):
+        sched.step()
+    sched.park(0)
+    sched.store.flush()
+    slab = os.path.join(str(tmp_path), "snap_0.bin")
+    raw = bytearray(open(slab, "rb").read())
+    raw[len(raw) // 3] ^= 0x10
+    open(slab, "wb").write(bytes(raw))
+
+    sched2 = Scheduler(eng, n_lanes=1)
+    assert sched2.n_recovered_sessions == 1
+    sched2.revive(0)
+    res = sched2.run()
+    assert res[0].status is Status.DONE           # recovered, not FAILED
+    np.testing.assert_array_equal(res[0].ids, want)
+    stats = sched2.stats()
+    assert stats["store_corrupt_detected"] == 1   # detection, counted
+    assert stats["n_snapshot_lost"] == 1
+    assert res[0].n_retries == 1                  # one replay spent
+    assert sched2.n_prefill_rounds >= 1           # recompute-from-prompt
+
+
+def test_dropped_snapshot_revive_recomputes_token_identical(tiny):
+    """Graceful degradation end-to-end: with a tiny RAM budget and NO
+    disk tier the park's snapshot is dropped for capacity. Revival
+    must roll the host stream back to the prompt and recompute —
+    token-identical, NO duplicated prefix — and a capacity drop burns
+    no replay retry (that budget is for integrity failures)."""
+    cfg, params, gates = tiny
+    req = _req()
+    want = _oneshot(cfg, params, gates, req, policy="trimkv")
+    eng = build_engine(cfg, params, gates, policy="trimkv", budget=16,
+                       prefill_chunk=8, decode_segment=2,
+                       snapshot_host_bytes=1)
+    sched = Scheduler(eng, n_lanes=1)
+    sched.submit(req)
+    for _ in range(3):
+        sched.step()
+    sched.park(0)
+    assert len(sched.results[0].tokens) > 0       # real progress parked
+    assert not sched.store.has(0)                 # ...and dropped
+    assert sched.stats()["store_dropped"] == 1
+    sched.revive(0)
+    res = sched.run()
+    assert res[0].status is Status.DONE
+    np.testing.assert_array_equal(res[0].ids, want)
+    assert res[0].n_retries == 0                  # capacity, not integrity
+    assert sched.n_snapshot_lost == 0
+
+
+def test_corruption_fails_terminally_once_budget_exhausted(tiny, tmp_path):
+    """With max_retries=0 the same corrupted revive goes terminal
+    FAILED with a reason — bounded replay, liveness preserved, and the
+    expiry costs zero extra device work."""
+    cfg, params, gates = tiny
+    req = _req()
+    eng = build_engine(cfg, params, gates, policy="trimkv", budget=16,
+                       prefill_chunk=8, decode_segment=2, max_retries=0,
+                       snapshot_dir=str(tmp_path))
+    sched = Scheduler(eng, n_lanes=1)
+    sched.submit(req)
+    for _ in range(3):
+        sched.step()
+    sched.park(0)
+    sched.store.flush()
+    slab = os.path.join(str(tmp_path), "snap_0.bin")
+    raw = bytearray(open(slab, "rb").read())
+    raw[7] ^= 0x01
+    open(slab, "wb").write(bytes(raw))
+    sched2 = Scheduler(eng, n_lanes=1)
+    sched2.revive(0)
+    res = sched2.run()
+    assert res[0].status is Status.FAILED
+    assert "integrity" in res[0].reason
+    assert sched2.n_failed == 1 and sched2.n_snapshot_lost == 1
+    assert eng.dispatch_count == (
+        sched.n_prefill_rounds + sched.n_segments + sched.n_resets +
+        sched.n_swaps + sched.n_resumes)          # restart spent nothing
