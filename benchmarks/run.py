@@ -12,7 +12,7 @@ from benchmarks import (fig3_pareto, fig5_interpretability, roofline,
                         table1_longproc, table3_longmem, table5_ablation,
                         table6_throughput, table7_serving, table8_slo,
                         table9_chunked_prefill, table10_faults,
-                        table11_store)
+                        table11_store, table12_prefix)
 
 BENCHES = (
     ("fig3_pareto", fig3_pareto.run),
@@ -25,6 +25,7 @@ BENCHES = (
     ("table9_chunked_prefill", table9_chunked_prefill.run),
     ("table10_faults", table10_faults.run),
     ("table11_store", table11_store.run),
+    ("table12_prefix", table12_prefix.run),
     ("fig5_interpretability", fig5_interpretability.run),
     ("roofline", roofline.run),
 )

@@ -231,6 +231,26 @@ class ServeConfig:
     # request goes TIMED_OUT (zero dispatches) and its snapshots are
     # released from every tier.
     park_exempts_timeout: bool = True
+    # --- prefix KV cache (PR 8, docs/serving.md §Prefix cache) ---
+    # prefix_cache_bytes: byte budget of the host-side radix-trie
+    # prompt cache (serve.prefix_cache) holding RETAINED KV slabs at
+    # chunk-boundary prompt prefixes. 0 = disabled (no trie, no probe).
+    # On an admission hit the cached slab is scattered into the lane
+    # and only the novel suffix is prefilled; over budget the coldest
+    # unpinned entry is evicted (LRU). Cross-memory families
+    # (vlm/encdec) bypass the cache entirely.
+    prefix_cache_bytes: int = 0
+    # prefix_ttl_sec: entries untouched (no hit, no insert refresh) for
+    # longer than this are expired lazily at the next probe/insert
+    # (0 = no TTL). Entries pinned by a live lane outlive their TTL
+    # until the pin is released.
+    prefix_ttl_sec: float = 0.0
+    # prefix_min_tokens: minimum prefix length (tokens) worth caching —
+    # shorter shared boundaries are never captured. Captures happen
+    # only at prefill_chunk-aligned boundaries the traffic has actually
+    # shared (longest common prefix vs recently observed prompts), so
+    # entries stay hittable and parity-exact.
+    prefix_min_tokens: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -38,10 +38,19 @@ from repro.serve import FaultInjector, Request, Scheduler, build_engine
 from repro.serve.request import latency_percentiles
 
 
+def _zipf_probs(n: int, alpha: float) -> np.ndarray:
+    """Bounded Zipf pmf over ranks 1..n: p(k) proportional to
+    k^-alpha — the classic shared-prefix popularity skew (a few hot
+    system prompts, a long tail of rare ones)."""
+    p = np.arange(1, n + 1, dtype=np.float64) ** -float(alpha)
+    return p / p.sum()
+
+
 def poisson_requests(n, rate, *, vocab, prompt_lo, prompt_hi, new_lo,
                      new_hi, seed=0, eos_id=-1, priority_frac=0.0,
                      high_deadline_ms=None, low_deadline_ms=None,
-                     mem_key=None, mem_shape=None, timeout_ms=None):
+                     mem_key=None, mem_shape=None, timeout_ms=None,
+                     prefix_pools=0, prefix_len=0, zipf_alpha=1.1):
     """Synthetic Poisson trace: exponential inter-arrival gaps at
     `rate` req/s, ragged prompt lengths and per-request max_new drawn
     uniformly, one RNG seed per request. A `priority_frac` fraction of
@@ -51,9 +60,25 @@ def poisson_requests(n, rate, *, vocab, prompt_lo, prompt_hi, new_lo,
     low_deadline_ms (None = no deadline). For cross-memory families
     pass mem_key/mem_shape (Engine.mem_key / Engine.mem_shape): each
     request then carries its own random memory of RAGGED length (half
-    to full slab) — the per-lane cross-memory path under load."""
+    to full slab) — the per-lane cross-memory path under load.
+
+    Shared-prefix pools (prefix_pools > 0, docs/serving.md §Prefix
+    cache): `prefix_pools` fixed system prompts of `prefix_len` tokens
+    (default prompt_hi) are sampled per request with Zipf(zipf_alpha)
+    popularity and CONCATENATED before its ragged user turn — the
+    workload class where prefix KV reuse pays: every repeat of a pool
+    can skip its prefill on a warm cache."""
     rng = np.random.RandomState(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    pools, pool_p = None, None
+    if prefix_pools > 0:
+        # pools come from their own RNG stream so the SAME pool token
+        # content is reproduced independent of n/rate/class draws
+        prng = np.random.RandomState(seed + 104729)
+        plen = prefix_len if prefix_len > 0 else prompt_hi
+        pools = [prng.randint(0, vocab, size=plen).astype(np.int32)
+                 for _ in range(prefix_pools)]
+        pool_p = _zipf_probs(prefix_pools, zipf_alpha)
     reqs = []
     for i in range(n):
         L = int(rng.randint(prompt_lo, prompt_hi + 1))
@@ -63,8 +88,12 @@ def poisson_requests(n, rate, *, vocab, prompt_lo, prompt_hi, new_lo,
             S, feat = mem_shape
             S_i = int(rng.randint(max(S // 2, 1), S + 1))
             extra = {mem_key: rng.randn(S_i, feat).astype(np.float32) * 0.1}
+        prompt = rng.randint(0, vocab, size=L).astype(np.int32)
+        if pools is not None:
+            pid = int(rng.choice(len(pools), p=pool_p))
+            prompt = np.concatenate([pools[pid], prompt])
         reqs.append(Request(
-            rid=i, prompt=rng.randint(0, vocab, size=L).astype(np.int32),
+            rid=i, prompt=prompt,
             max_new=int(rng.randint(new_lo, new_hi + 1)), seed=i,
             eos_id=eos_id, arrival=float(arrivals[i]),
             priority=1 if high else 0,
@@ -91,7 +120,10 @@ def _run_stream(cfg, params, gates, args):
                        shed_policy=args.shed_policy,
                        checkpoint_every=args.checkpoint_every,
                        snapshot_dir=args.snapshot_dir,
-                       snapshot_host_bytes=args.snapshot_host_bytes)
+                       snapshot_host_bytes=args.snapshot_host_bytes,
+                       prefix_cache_bytes=args.prefix_cache_bytes,
+                       prefix_ttl_sec=args.prefix_ttl_sec,
+                       prefix_min_tokens=args.prefix_min_tokens)
     reqs = poisson_requests(
         args.requests, args.rate, vocab=cfg.vocab_size,
         prompt_lo=max(args.prompt_len // 4, 4), prompt_hi=args.prompt_len,
@@ -99,7 +131,8 @@ def _run_stream(cfg, params, gates, args):
         seed=args.seed, priority_frac=args.priority_frac,
         high_deadline_ms=args.deadline_ms,
         mem_key=eng.mem_key, mem_shape=eng.mem_shape,
-        timeout_ms=args.timeout_ms)
+        timeout_ms=args.timeout_ms, prefix_pools=args.prefix_pools,
+        prefix_len=args.prefix_len, zipf_alpha=args.zipf_alpha)
 
     def make_injector():
         if not args.inject_faults:
@@ -157,6 +190,22 @@ def _run_stream(cfg, params, gates, args):
           f"io_errors={st['store_io_errors']} "
           f"snapshot_lost={st['n_snapshot_lost']} "
           f"recovered_sessions={st['n_recovered_sessions']}")
+    if eng.prefix_cache is not None and sched._pc is not None:
+        # prefix cache (docs/serving.md §Prefix cache): the trie lives
+        # on the engine, so the warm-up drain above pre-populates it —
+        # the measured counters below show WARM-cache behavior
+        probes = st["n_prefix_hits"] + st["n_prefix_misses"]
+        rate = st["n_prefix_hits"] / max(probes, 1)
+        print(f"  prefix: hits={st['n_prefix_hits']} "
+              f"misses={st['n_prefix_misses']} "
+              f"hit_rate={rate:.2f} "
+              f"reused_tokens={st['n_prefix_reused_tokens']} "
+              f"installs={st['n_prefix_installs']} "
+              f"extracts={st['n_prefix_extracts']} "
+              f"inserts={st['prefix_inserts']} "
+              f"evictions={st['prefix_evictions']} "
+              f"entries={st['prefix_entries']} "
+              f"bytes={st['prefix_bytes']}")
     if args.inject_faults:
         from repro.serve.request import TERMINAL_STATUSES
         n_terminal = sum(rs.status in TERMINAL_STATUSES
@@ -288,6 +337,28 @@ def main():
                     help="--inject-faults: per-step probability of "
                          "arming a snapshot-store disk fault (write "
                          "failure or silent truncation)")
+    # --- prefix KV cache (PR 8, docs/serving.md §Prefix cache) ---
+    ap.add_argument("--prefix-cache-bytes", type=int, default=0,
+                    help="--stream: byte budget of the radix-trie "
+                         "prefix KV cache (0 = off); admission reuses "
+                         "the longest cached chunk-aligned prompt "
+                         "prefix and prefills only the novel suffix")
+    ap.add_argument("--prefix-ttl-sec", type=float, default=0.0,
+                    help="--stream: expire unpinned prefix-cache "
+                         "entries untouched this long (0 = no TTL)")
+    ap.add_argument("--prefix-min-tokens", type=int, default=0,
+                    help="--stream: do not capture shared prefixes "
+                         "shorter than this many tokens")
+    ap.add_argument("--prefix-pools", type=int, default=0,
+                    help="--stream: number of shared system prompts "
+                         "(Zipf-sampled, concatenated before each "
+                         "ragged user turn; 0 = fully random prompts)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="--prefix-pools: tokens per shared system "
+                         "prompt (0 = --prompt-len)")
+    ap.add_argument("--zipf-alpha", type=float, default=1.1,
+                    help="--prefix-pools: Zipf popularity exponent of "
+                         "the pool draw (higher = hotter head)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

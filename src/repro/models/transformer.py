@@ -440,8 +440,29 @@ def prefill_chunk(params, gate_params, cfg, tokens, state, policy,
                                policy, serve_cfg, n_valid=n_valid)
 
 
+def _where_lanes(mask, new, old):
+    """Per-lane select over two same-shape decode states: lanes where
+    mask ([B] bool) is True take `new`'s rows, the rest keep `old`'s —
+    the state analogue of jnp.where, respecting the layout (t [B],
+    layers leaves [R, B, ...], tail leaves [B, ...])."""
+    out = {"t": jnp.where(mask, new["t"], old["t"])}
+    if new["layers"] is not None:
+        out["layers"] = jax.tree.map(
+            lambda n, o: jnp.where(
+                mask.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o),
+            new["layers"], old["layers"])
+    else:
+        out["layers"] = None
+    out["tail"] = jax.tree.map(
+        lambda n, o: jnp.where(mask.reshape((-1,) + (1,) * (n.ndim - 1)),
+                               n, o),
+        new["tail"], old["tail"])
+    return out
+
+
 def prefill_chunk_loop(params, gate_params, cfg, chunks, n_valid, state,
-                       policy, serve_cfg, *, extra_inputs=None):
+                       policy, serve_cfg, *, extra_inputs=None,
+                       capture_chunk=None):
     """Fused chunked prefill: drive the whole chunk pipeline (embed ->
     chunk attention -> eviction merge, per chunk) under ONE jax.lax.scan
     so a long-prompt prefill is a single device program — O(1) host
@@ -464,7 +485,16 @@ def prefill_chunk_loop(params, gate_params, cfg, chunks, n_valid, state,
     (+ optional per-row "mem_len" for a ragged batch padded to a
     shared S); the memory K/V are installed into the state ONCE before
     the scan (install_memory) — they are loop-invariant, so the scan
-    body no longer rebuilds them per chunk."""
+    body no longer rebuilds them per chunk.
+
+    capture_chunk: optional [B] int32 — per-lane chunk-boundary
+    SNAPSHOT for the prefix cache (serve.prefix_cache): lane l's state
+    is captured right after its capture_chunk[l]-th chunk step (0 =
+    no capture; the snapshot row stays the entry state). The snapshot
+    rides the scan carry (a per-lane _where_lanes select, no extra
+    dispatch) and a third return value `snap` (same structure as
+    `state`) carries it out — rows with capture_chunk 0 are
+    meaningless there."""
     extra_inputs = extra_inputs or {}
     memory, mem_len = _memory_from_inputs(params, cfg, extra_inputs)
     if memory is not None:
@@ -472,18 +502,32 @@ def prefill_chunk_loop(params, gate_params, cfg, chunks, n_valid, state,
     B = chunks.shape[1]
     dtype = params["embed"].dtype
     ragged = n_valid.ndim == 2
+    capture = capture_chunk is not None
 
     def body(carry, xs):
-        state, h_prev = carry
-        tokens, nv = xs
+        if capture:
+            state, h_prev, snap = carry
+            tokens, nv, j = xs
+        else:
+            state, h_prev = carry
+            tokens, nv = xs
         state, h_last = _prefill_chunk_step(params, gate_params, cfg,
                                             tokens, state, policy,
                                             serve_cfg, n_valid=nv)
         if ragged:
             h_last = jnp.where((nv > 0)[:, None], h_last, h_prev)
+        if capture:
+            snap = _where_lanes(capture_chunk == j + 1, state, snap)
+            return (state, h_last, snap), None
         return (state, h_last), None
 
     h0 = jnp.zeros((B, cfg.d_model), dtype)
+    if capture:
+        n_chunks = chunks.shape[0]
+        (state, h_last, snap), _ = jax.lax.scan(
+            body, (state, h0, state),
+            (chunks, n_valid, jnp.arange(n_chunks, dtype=jnp.int32)))
+        return state, h_last, snap
     (state, h_last), _ = jax.lax.scan(body, (state, h0),
                                       (chunks, n_valid))
     return state, h_last

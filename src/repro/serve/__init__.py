@@ -1,5 +1,6 @@
 from repro.serve.engine import Engine, build_engine
 from repro.serve.faults import FaultInjector, poison_lanes
+from repro.serve.prefix_cache import PrefixCache, PrefixEntry
 from repro.serve.request import (TERMINAL_STATUSES, LaneSnapshot, Request,
                                  RequestState, Status)
 from repro.serve.scheduler import Scheduler
@@ -9,4 +10,4 @@ from repro.serve.store import (SnapshotStore, checksum_snapshot,
 __all__ = ["Engine", "build_engine", "Request", "RequestState", "Status",
            "Scheduler", "FaultInjector", "poison_lanes", "LaneSnapshot",
            "TERMINAL_STATUSES", "SnapshotStore", "checksum_snapshot",
-           "verify_snapshot"]
+           "verify_snapshot", "PrefixCache", "PrefixEntry"]

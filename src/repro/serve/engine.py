@@ -49,6 +49,7 @@ import numpy as np
 from repro.configs import ServeConfig
 from repro.core.policies import make_policy
 from repro.models import transformer as T
+from repro.serve.prefix_cache import PrefixCache
 
 
 class Engine:
@@ -105,6 +106,15 @@ class Engine:
                                     donate_argnums=(0,))
         self._tf_loop = jax.jit(_tf_loop, donate_argnums=(0,))
         self._lane_closures = {}
+        # prefix KV cache (docs/serving.md §Prefix cache): owned by the
+        # ENGINE, not the scheduler, so successive schedulers built on
+        # this engine (warm-up then measured run, multi-phase benches)
+        # share one warm trie the way they share one compilation cache
+        self.prefix_cache = (
+            PrefixCache(serve_cfg.prefix_cache_bytes,
+                        ttl_sec=serve_cfg.prefix_ttl_sec)
+            if serve_cfg.prefix_cache_bytes > 0 else None)
+        self._fresh_row = None
 
     @property
     def mem_key(self) -> Optional[str]:
@@ -221,6 +231,45 @@ class Engine:
                                    {mem_key: mem, "mem_len": mem_len},
                                    install)
 
+        def _admit_prefix(state, tok, keys, chunks, n_valid, new_keys,
+                          lanes, sub0, capture_chunk):
+            # prefix-cache admission (docs/serving.md §Prefix cache):
+            # sub0 carries the lanes' INITIAL sub-state — cached slabs
+            # scattered at hit rows (their per-lane t already at the
+            # prefix boundary, so chunk positions continue from it),
+            # fresh rows elsewhere — and the grid holds only each
+            # request's NOVEL SUFFIX chunks. capture_chunk[i] = j > 0
+            # snapshots lane i's state right after its j-th suffix
+            # chunk (its capture boundary) via the scan's snap carry;
+            # the host inserts those rows into the trie. Still ONE
+            # dispatch per admission round: hits and captures ride the
+            # same program that cold admission uses.
+            sub, h_last, snap = T.prefill_chunk_loop(
+                params, gates, cfg, chunks, n_valid, sub0, policy, serve,
+                capture_chunk=capture_chunk)
+            logits = T.compute_logits(params, cfg, h_last)
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            state = T.insert_lanes(state, sub, lanes)
+            return (state, tok.at[lanes].set(first),
+                    keys.at[lanes].set(new_keys), snap)
+
+        def _admit_capture(state, tok, keys, chunks, n_valid, new_keys,
+                           lanes, capture_chunk):
+            # capture-only variant (no hits this round): fresh
+            # sub-state built on device, so the host skips shipping a
+            # [n_lanes]-row sub0 it would only fill with zeros
+            sub0 = T.init_decode_state(cfg, chunks.shape[1], serve.budget)
+            return _admit_prefix(state, tok, keys, chunks, n_valid,
+                                 new_keys, lanes, sub0, capture_chunk)
+
+        def _prefix_install(state, sub, lanes):
+            # interleaved-mode prefix hit: scatter the cached slabs
+            # into their lanes BEFORE the mixed segment streams the
+            # suffix chunks. tok/keys need no install here — the mixed
+            # scan writes both at the lane's finish transition.
+            return T.insert_lanes(state, sub,
+                                  jnp.asarray(lanes, jnp.int32))
+
         def _extract(state, tok, keys, lanes):
             # swap-out / checkpoint: gather the lanes' complete movable
             # state + carried token + RNG chain in ONE dispatch. lanes
@@ -256,6 +305,18 @@ class Engine:
             "resume": jax.jit(_resume, donate_argnums=(0,)),
             # quarantine: reset + zero the poisoned lanes' K/V payload
             "scrub": jax.jit(T.scrub_lanes, donate_argnums=(0,)),
+            # prefix-cache closures — self-attention families only; the
+            # scheduler bypasses the cache for cross-memory families
+            # (a cached slab would not carry the encoder/vision memory
+            # its suffix chunks cross-attend into)
+            "admit_prefix": (jax.jit(_admit_prefix, donate_argnums=(0,))
+                             if mem_key is None else None),
+            "admit_capture": (jax.jit(_admit_capture,
+                                      donate_argnums=(0,))
+                              if mem_key is None else None),
+            "prefix_install": (jax.jit(_prefix_install,
+                                       donate_argnums=(0,))
+                               if mem_key is None else None),
         }
         self._lane_closures[greedy] = closures
         return closures
@@ -269,6 +330,16 @@ class Engine:
 
     def fresh_state(self, batch: int):
         return T.init_decode_state(self.cfg, batch, self.serve.budget)
+
+    def fresh_lane_row(self):
+        """Host-side single-lane fresh decode-state row (cached after
+        the first call) — the filler the scheduler stacks at non-hit
+        rows of a prefix-admission sub0, shape-compatible with the
+        single-row slabs PrefixCache stores."""
+        if self._fresh_row is None:
+            self._fresh_row = jax.device_get(
+                T.init_decode_state(self.cfg, 1, self.serve.budget))
+        return self._fresh_row
 
     # ---------------------------------------------------------- prefill
 

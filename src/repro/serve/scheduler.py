@@ -56,11 +56,30 @@ state). Each lane holds at most one in-flight request; the scheduler
 Dispatch accounting: every device program this scheduler launches bumps
 the owning Engine's `dispatch_count`, and the total is
 n_prefill_rounds + n_segments + n_resets + n_swaps + n_resumes
-(+ n_faults_injected under fault injection) — O(prefill rounds +
-segments + preemptions), NEVER O(tokens) or O(requests); interleaved
++ n_prefix_installs + n_prefix_extracts (+ n_faults_injected under
+fault injection) — O(prefill rounds + segments + preemptions +
+prefix-cache traffic), NEVER O(tokens) or O(requests); interleaved
 mode keeps n_prefill_rounds at 0 because admission rides inside the
 segments (tests/test_scheduler.py asserts the exact formula under churn
 and mixed traffic).
+
+Prefix KV cache (PR 8, serve.prefix_cache, docs/serving.md §Prefix
+cache): when serve_cfg.prefix_cache_bytes > 0 (self-attention families
+only — cross-memory slabs cannot ride a cached prefix), admission walks
+the engine's radix trie for the longest cached chunk-aligned prefix of
+each fresh prompt. A HIT scatters the cached retained slab into the
+free lane and prefills only the novel suffix (phased: the slab rides
+into the admission dispatch as the lane's initial sub-state, zero extra
+dispatches; interleaved: one n_prefix_installs dispatch per admission
+round with hits, then the suffix chunks stream through the mixed
+segments as usual). CAPTURE is traffic-aware: the trie's observe()
+window picks the deepest chunk boundary the prompt shares with recent
+traffic, and the post-prefill slab at that boundary is inserted (phased:
+snapshotted INSIDE the admission scan via the capture_chunk carry;
+interleaved: the schedule stops at the boundary and one batched
+n_prefix_extracts dispatch gathers it). Hits pin their entry until the
+request leaves its lane, so LRU/TTL eviction can never tear a slab out
+from under a live lane.
 
 Cross-memory families (vlm / encdec, PR 5): each request carries its
 own vision/encoder memory in `Request.extra_inputs` (ragged lengths).
@@ -172,10 +191,17 @@ class _LanePrefill:
     """Host-side progress of one interleaved admission prefill: the
     request's prompt chunked exactly as one-shot chunked prefill chunks
     it ([n_chunks, C] full chunks then the padded tail), fed one chunk
-    per segment step until done."""
+    per segment step until done. On a prefix-cache hit the grid holds
+    only the NOVEL SUFFIX chunks (the cached slab was installed before
+    the first segment). While capture_key is set, chunks at/after
+    capture_at stay OFF the schedule until the boundary slab has been
+    extracted into the trie (then capture_key clears and the suffix
+    resumes) — so the captured state is exactly the prefix state."""
     chunks: np.ndarray                 # [n_chunks, C] int32
     n_valid: np.ndarray                # [n_chunks] int32 (C ... tail)
     next_chunk: int = 0
+    capture_at: int = 0                # grid-relative capture boundary
+    capture_key: Optional[np.ndarray] = None   # prompt[:cap_tokens]
 
     @property
     def n_chunks(self) -> int:
@@ -232,6 +258,15 @@ class Scheduler:
         self._extract = closures["extract"]
         self._resume = closures["resume"]
         self._scrub = closures["scrub"]
+        self._admit_prefix_fn = closures["admit_prefix"]
+        self._admit_capture_fn = closures["admit_capture"]
+        self._prefix_install = closures["prefix_install"]
+        # prefix KV cache: the trie lives on the ENGINE (shared across
+        # schedulers, like the compilation cache); cross-memory families
+        # bypass it — a cached slab cannot carry the encoder/vision
+        # memory its suffix would cross-attend into
+        self._pc = (engine.prefix_cache if self.mem_key is None
+                    else None)
 
         # device lane state
         self.state = engine.fresh_state(n_lanes)
@@ -251,8 +286,9 @@ class Scheduler:
         self.results: Dict[int, RequestState] = {}
         # dispatch accounting (engine.dispatch_count gets every launch):
         # total launches == n_prefill_rounds + n_segments + n_resets
-        # + n_swaps + n_resumes (+ n_faults_injected when an injector
-        # poisons lanes) — O(prefills + segments + preemptions),
+        # + n_swaps + n_resumes + n_prefix_installs + n_prefix_extracts
+        # (+ n_faults_injected when an injector poisons lanes) —
+        # O(prefills + segments + preemptions + prefix traffic),
         # asserted by tests/test_scheduler.py and tests/test_faults.py;
         # interleaved admission keeps n_prefill_rounds at 0
         self.n_prefill_rounds = 0
@@ -273,6 +309,16 @@ class Scheduler:
         self.n_snapshot_lost = 0  # snapshots that failed checksum/IO at
         #                           resume and fell back to
         #                           recompute-from-prompt (bounded replay)
+        # prefix-cache counters: admission-time trie traffic (hits /
+        # misses / prompt tokens NOT re-prefilled because a cached slab
+        # covered them) and the two interleaved-only dispatch kinds —
+        # slab installs (hits) and boundary extracts (captures); the
+        # phased admission dispatch absorbs both at zero extra cost
+        self.n_prefix_hits = 0
+        self.n_prefix_misses = 0
+        self.n_prefix_reused_tokens = 0
+        self.n_prefix_installs = 0
+        self.n_prefix_extracts = 0
         # interleaved segments whose prefill drained mid-segment and
         # were split into a mixed part + a pure-decode remainder (each
         # half is its own dispatch and counts in n_segments)
@@ -282,6 +328,12 @@ class Scheduler:
         # itself), so its size is O(log2 decode_segment), asserted in
         # tests/test_faults.py
         self.decode_bucket_lengths = set()
+        # same for the phased admission grid's chunk axis: suffix-only
+        # prefill diversifies grid lengths, so _pack_prompts rounds
+        # n_chunks up to power-of-two buckets (all-zero-valid tail
+        # chunks freeze every row) — O(log2 max_prompt_chunks)
+        # admission-closure shapes instead of one per suffix length
+        self.prefill_bucket_lengths = set()
         # global decode-step clock: total scan steps run so far, the
         # basis of the deterministic RequestState.first_emit_step
         self._steps_done = 0
@@ -512,6 +564,7 @@ class Scheduler:
         self.n_resets += 1
         self.state = self._reset(self.state, jnp.asarray(mask))
         rs.status, rs.lane = Status.PARKED, -1
+        self._release_prefix(rs.rid)
         self.lane_req[lane] = None
         self.active[lane] = False
         return rs
@@ -599,6 +652,7 @@ class Scheduler:
                 rs.tokens.clear()
             rs.n_preempts += 1
             self.n_preempted += 1
+            self._release_prefix(rs.rid)
             self.lane_req[lane] = None
             self.lane_prefill[lane] = None
             self.active[lane] = False
@@ -654,6 +708,7 @@ class Scheduler:
             rs.reason = (f"exceeded timeout_ms={rs.request.timeout_ms} "
                          f"while running")
             self.store.drop(rs.rid)
+            self._release_prefix(rs.rid)
             self.n_timeouts += 1
             self.lane_req[lane] = None
             self.lane_prefill[lane] = None
@@ -661,18 +716,33 @@ class Scheduler:
 
     # --------------------------------------------------------- admission
 
-    def _pack_prompts(self, batch: List[RequestState]):
+    def _pack_prompts(self, batch: List[RequestState],
+                      skip_chunks: Optional[Dict[int, int]] = None):
         """Pack ragged prompts into one padded chunk grid:
         chunks [n_chunks, B, C] + per-request valid matrix
         [n_chunks, B] (full chunks, then each request's tail, then
         zeros — zero-chunks freeze that row, see prefill_chunk_loop).
         The batch dim is ALWAYS padded to n_lanes with all-zero-valid
-        rows (frozen end-to-end, then dropped at the scatter), so the
-        admission closure compiles once per n_chunks — never per
-        admission size k, which varies freely under churn."""
+        rows (frozen end-to-end, then dropped at the scatter).
+        Per-row `skip_chunks` drops each request's already-cached
+        prefix chunks (a prefix-cache hit prefills only its novel
+        suffix; the cached slab's per-lane clock makes positions
+        continue where the prefix left off). The chunk axis is rounded
+        UP to the next POWER-OF-TWO bucket with all-zero-valid tail
+        chunks — the prefill mirror of the decode drain-split buckets
+        — so the suffix-length diversity prefix reuse creates costs
+        O(log2 max_prompt_chunks) admission-closure compiles, never
+        one per distinct length (and never one per admission size k,
+        which varies freely under churn)."""
         C = self.serve.prefill_chunk
-        per = [_chunk_prompt(rs.request.prompt, C) for rs in batch]
+        per = []
+        for i, rs in enumerate(batch):
+            ch, nv = _chunk_prompt(rs.request.prompt, C)
+            d = skip_chunks.get(i, 0) if skip_chunks else 0
+            per.append((ch[d:], nv[d:]))
         n_chunks = max(ch.shape[0] for ch, _ in per)
+        n_chunks = 1 << (n_chunks - 1).bit_length()
+        self.prefill_bucket_lengths.add(n_chunks)
         chunks = np.zeros((n_chunks, self.n_lanes, C), np.int32)
         n_valid = np.zeros((n_chunks, self.n_lanes), np.int32)
         for i, (ch, nv) in enumerate(per):
@@ -694,6 +764,105 @@ class Scheduler:
             mem[row, : m.shape[0]] = m
             mem_len[row] = m.shape[0]
         return jnp.asarray(mem), jnp.asarray(mem_len)
+
+    # ------------------------------------------------------ prefix cache
+
+    def _probe_prefix(self, batch: List[RequestState]):
+        """Per fresh admission batch: walk the trie for each prompt's
+        longest cached chunk-aligned prefix and decide what to capture.
+        Returns (hits, caps), both keyed by batch row:
+        hits[i] = PrefixEntry whose slab seeds row i (pinned for the
+        rid until the request leaves its lane); caps[i] = (cap_rel,
+        key) — snapshot row i after its cap_rel-th GRID chunk (grid =
+        suffix when row i also hit) and insert it under key.
+
+        Hit rule: lookup is LIMITED to the last chunk boundary STRICTLY
+        below the prompt, so at least one suffix chunk always remains —
+        the first output token still falls out of the live prefill.
+        Capture rule (traffic-aware): the boundary is the deepest chunk
+        multiple of the prompt's longest common prefix with the trie's
+        recent-prompt window (observe()), clamped to the same strict
+        limit — capturing each prompt's OWN deepest boundary would fill
+        the budget with suffixes nobody else can hit. Gated on
+        serve.prefix_min_tokens, on being strictly deeper than the hit
+        (chained hits deepen entries), and deduped against both the
+        trie and keys already chosen this round."""
+        C = self.serve.prefill_chunk
+        hits: Dict[int, object] = {}
+        caps: Dict[int, Tuple[int, np.ndarray]] = {}
+        chosen = set()
+        for i, rs in enumerate(batch):
+            prompt = np.asarray(rs.request.prompt, np.int32)
+            n_chunks = -(-prompt.size // C)
+            limit = (n_chunks - 1) * C
+            entry = (self._pc.lookup(prompt, limit=limit, pin=rs.rid)
+                     if limit > 0 else None)
+            d1 = 0
+            if entry is not None:
+                d1 = entry.n_tokens // C
+                hits[i] = entry
+                self.n_prefix_hits += 1
+                self.n_prefix_reused_tokens += entry.n_tokens
+            else:
+                self.n_prefix_misses += 1
+            lcp = self._pc.observe(prompt)
+            cap_tokens = min(lcp // C * C, limit)
+            if (cap_tokens >= max(self.serve.prefix_min_tokens, C)
+                    and cap_tokens // C > d1):
+                key = prompt[:cap_tokens]
+                kb = key.tobytes()
+                if kb not in chosen and not self._pc.contains(key):
+                    chosen.add(kb)
+                    caps[i] = (cap_tokens // C - d1, key)
+        return hits, caps
+
+    def _install_prefix(self, batch: List[Tuple[object, int]]) -> None:
+        """Interleaved hit path: ONE insert_lanes dispatch scatters the
+        k cached prefix slabs into their freshly assigned lanes before
+        the mixed segments stream each request's suffix chunks (phased
+        hits ride inside the admission dispatch instead — zero extra
+        cost there). Lane operand padded to n_lanes as usual (pad rows
+        scatter out of bounds). tok/keys are NOT touched: the mixed
+        scan writes both at the lane's finish transition."""
+        rows = [entry.state for entry, _ in batch]
+        sub = jax.tree.map(jnp.asarray, _stack_rows(rows, self.n_lanes))
+        lane_idx = np.full(self.n_lanes, self.n_lanes, np.int32)
+        lane_idx[: len(batch)] = [lane for _, lane in batch]
+        self.eng.dispatch_count += 1
+        self.n_prefix_installs += 1
+        self.state = self._prefix_install(self.state, sub,
+                                          jnp.asarray(lane_idx))
+
+    def _capture_lanes(self, lanes: List[int]) -> None:
+        """Interleaved capture path: the schedule held these lanes at
+        their capture boundary (next_chunk == capture_at), so their
+        current state IS the boundary prefix state — ONE batched
+        extract dispatch gathers the retained slabs, each is inserted
+        into the trie under its chunk-aligned key, and clearing
+        capture_key unblocks the remaining suffix chunks for the next
+        segment's schedule. Lane operand padded as in _swap_out."""
+        idx = np.full(self.n_lanes, lanes[0], np.int32)
+        idx[: len(lanes)] = lanes
+        self.eng.dispatch_count += 1
+        self.n_prefix_extracts += 1
+        sub, _, _ = jax.device_get(
+            self._extract(self.state, self.tok, self.keys,
+                          jnp.asarray(idx)))
+        for i, lane in enumerate(lanes):
+            pf = self.lane_prefill[lane]
+            self._pc.insert(pf.capture_key, _snap_row(sub, i))
+            pf.capture_key = None
+
+    def _release_prefix(self, rid: int) -> None:
+        """Unpin rid's prefix-cache entry (idempotent; no-op when the
+        cache is off or rid holds no pin) — called on EVERY path that
+        clears a lane (retire, preempt, timeout, quarantine, park), so
+        a slab becomes evictable the moment no lane was built from
+        it."""
+        if self._pc is not None:
+            self._pc.release(rid)
+
+    # --------------------------------------------------- admission lanes
 
     def _claim_lanes(self) -> List[int]:
         """Common admission gate: which free lanes can be filled now
@@ -771,7 +940,12 @@ class Scheduler:
         the whole admission batch (ragged prefill, first tokens, lane
         scatter) is ONE dispatch however many requests it packs, but
         decode lanes sit idle while it runs. Snapshot-holding requests
-        are restored by ONE resume dispatch instead (no re-prefill)."""
+        are restored by ONE resume dispatch instead (no re-prefill).
+        Prefix-cache rounds stay ONE dispatch too: hit rows enter the
+        grid as suffix-only chunks seeded by their cached slab (sub0),
+        and capture rows are snapshotted inside the admission scan
+        (capture_chunk carry) and inserted into the trie from the
+        returned snap."""
         resume, fresh = self._take_admissions()
         if resume:
             self._resume_lanes(resume)
@@ -780,7 +954,12 @@ class Scheduler:
         batch = [rs for rs, _ in fresh]
         lanes = [lane for _, lane in fresh]
         k = len(fresh)
-        chunks, n_valid = self._pack_prompts(batch)
+        hits, caps = ({}, {})
+        if self._pc is not None:
+            hits, caps = self._probe_prefix(batch)
+        C = self.serve.prefill_chunk
+        skip = {i: e.n_tokens // C for i, e in hits.items()} or None
+        chunks, n_valid = self._pack_prompts(batch, skip_chunks=skip)
         # pad rows scatter to index n_lanes: OUT OF BOUNDS, so jax
         # drops them (the default scatter mode) — no lane is touched
         lane_idx = np.full(self.n_lanes, self.n_lanes, np.int32)
@@ -794,7 +973,33 @@ class Scheduler:
             # sub-state row i holds batch[i]; its memory rides the same
             # rows and is installed inside the same single dispatch
             args += self._pack_memory(dict(enumerate(batch)))
-        self.state, self.tok, self.keys = self._admit_fn(*args)
+            self.state, self.tok, self.keys = self._admit_fn(*args)
+        elif hits or caps:
+            capture = np.zeros(self.n_lanes, np.int32)
+            for i, (cap_rel, _) in caps.items():
+                capture[i] = cap_rel
+            if hits:
+                # hit rows start from their cached slab (its per-lane
+                # clock already at the prefix boundary); the rest from
+                # a fresh host row — one stacked sub0 operand
+                rows = [hits[i].state if i in hits
+                        else self.eng.fresh_lane_row()
+                        for i in range(self.n_lanes)]
+                sub0 = jax.tree.map(jnp.asarray,
+                                    _stack_rows(rows, self.n_lanes))
+                (self.state, self.tok, self.keys,
+                 snap) = self._admit_prefix_fn(*args, sub0,
+                                               jnp.asarray(capture))
+            else:
+                (self.state, self.tok, self.keys,
+                 snap) = self._admit_capture_fn(*args,
+                                                jnp.asarray(capture))
+            if caps:
+                snap_host = jax.device_get(snap)
+                for i, (_, key) in caps.items():
+                    self._pc.insert(key, _snap_row(snap_host, i))
+        else:
+            self.state, self.tok, self.keys = self._admit_fn(*args)
         now = self._now()
         for rs, lane in fresh:
             rs.status, rs.lane, rs.admit_sec = Status.RUNNING, lane, now
@@ -817,11 +1022,21 @@ class Scheduler:
         resume, fresh = self._take_admissions()
         if resume:
             self._resume_lanes(resume)
+        hits, caps = ({}, {})
+        if self._pc is not None and fresh:
+            hits, caps = self._probe_prefix([rs for rs, _ in fresh])
         now = self._now()
         C = self.serve.prefill_chunk
-        for rs, lane in fresh:
-            self.lane_prefill[lane] = _LanePrefill(
-                *_chunk_prompt(rs.request.prompt, C))
+        install: List[Tuple[object, int]] = []
+        for i, (rs, lane) in enumerate(fresh):
+            ch, nv = _chunk_prompt(rs.request.prompt, C)
+            d1 = hits[i].n_tokens // C if i in hits else 0
+            pf = _LanePrefill(ch[d1:], nv[d1:])
+            if i in caps:
+                pf.capture_at, pf.capture_key = caps[i]
+            self.lane_prefill[lane] = pf
+            if i in hits:
+                install.append((hits[i], lane))
             rs.status, rs.lane, rs.admit_sec = Status.RUNNING, lane, now
             self.lane_req[lane] = rs
             self.active[lane] = False    # activates inside the scan at
@@ -829,6 +1044,10 @@ class Scheduler:
             self.n_emitted[lane] = 0
             self.max_new[lane] = rs.request.max_new
             self.eos[lane] = rs.request.eos_id
+        if install:
+            # one dispatch seeds every hit lane with its cached slab;
+            # the mixed segments then stream only the novel suffixes
+            self._install_prefix(install)
         return len(resume) + len(fresh)
 
     # ---------------------------------------------------------- decoding
@@ -864,6 +1083,14 @@ class Scheduler:
                 pf = self.lane_prefill[lane]
                 i = progress[lane]
                 if i >= pf.n_chunks:
+                    continue
+                if pf.capture_key is not None and i >= pf.capture_at:
+                    # hold at the capture boundary: the slab must be
+                    # extracted (end of this segment) before any chunk
+                    # past it may mutate the lane. capture_at >= 1 and
+                    # captures fire every segment boundary, so a held
+                    # lane ALWAYS still has schedulable chunks — the
+                    # drain can never collapse to zero because of this
                     continue
                 tok_count = int(pf.n_valid[i])
                 if budget > 0 and spent > 0 and spent + tok_count > budget:
@@ -965,6 +1192,7 @@ class Scheduler:
             self.lane_req[lane] = None
             self.lane_prefill[lane] = None
             self.active[lane] = False
+            self._release_prefix(rs.rid)
             rs.lane = -1
             rs.n_retries += 1
             if rs.n_retries > self.serve.max_retries:
@@ -1042,11 +1270,20 @@ class Scheduler:
                 rs.status, rs.finish_sec, rs.lane = Status.DONE, now, -1
                 self.lane_req[lane] = None
                 self.store.drop(rs.rid)  # release snapshots, every tier
+                self._release_prefix(rs.rid)
                 finished.append(rs)
                 retired_lanes.append(lane)
         self._steps_done += n_steps
         if bad:
             self._quarantine(bad)
+        if self._pc is not None:
+            ready = [l for l in range(self.n_lanes)
+                     if self.lane_prefill[l] is not None
+                     and self.lane_prefill[l].capture_key is not None
+                     and self.lane_prefill[l].next_chunk
+                     >= self.lane_prefill[l].capture_at]
+            if ready:
+                self._capture_lanes(ready)
         if retired_lanes:
             # one vectorized reset for every lane retired this segment
             mask = np.zeros(self.n_lanes, bool)
@@ -1114,6 +1351,18 @@ class Scheduler:
         # snapshot tier counters (serve.store) — hits/spills/corruption
         # detection/IO degradation, prefixed to keep one flat namespace
         out.update({f"store_{k}": v for k, v in self.store.stats().items()})
+        if self._pc is not None:
+            # prefix-cache traffic: scheduler-side admission counters
+            # plus the trie's own structural counters (prefix_*)
+            out.update({
+                "n_prefix_hits": self.n_prefix_hits,
+                "n_prefix_misses": self.n_prefix_misses,
+                "n_prefix_reused_tokens": self.n_prefix_reused_tokens,
+                "n_prefix_installs": self.n_prefix_installs,
+                "n_prefix_extracts": self.n_prefix_extracts,
+            })
+            out.update({f"prefix_{k}": v
+                        for k, v in self._pc.stats().items()})
         return out
 
     def run(self, requests: Iterable[Request] = (),

@@ -1,0 +1,360 @@
+"""Radix-trie prefix KV reuse (PR 8): retained-slab prompt cache.
+
+Claims under test (docs/serving.md §Prefix cache):
+  1. PrefixCache is a correct radix trie: longest-cached-prefix lookup
+     under an explicit limit, mid-edge splits, exact-key dedupe,
+     byte-accounted LRU eviction, TTL expiry on an injected clock, and
+     pin semantics (pinned entries survive LRU and TTL; an insert that
+     cannot fit because of pins is rejected, not an error).
+  2. PARITY: serving a shared-prefix trace through a warm cache is
+     token-identical to the cold serve AND to one-shot
+     Engine.generate(chunked=True) per request — for every eviction
+     policy x both attention impls x both admission modes. Entries
+     live only at chunk-aligned boundaries, so replaying the suffix on
+     a cached slab is bit-identical to the cold prefill.
+  3. The exact dispatch formula extends to prefix traffic:
+     dispatches == n_prefill_rounds + n_segments + n_resets + n_swaps
+     + n_resumes + n_faults_injected + n_prefix_installs
+     + n_prefix_extracts — under hits, misses, captures, and
+     LRU churn (phased hits/captures ride inside the admission
+     dispatch; the two n_prefix_* terms are interleaved-only).
+  4. Pins never leak: after a drain every pin is released
+     (prefix_pinned == 0), so nothing is immortal in the LRU.
+  5. Cross-memory engines (vlm/encdec) BYPASS the cache — a slab
+     cannot carry the lane's external memory, so the scheduler opts
+     out rather than serve a hit with stale cross-attention state.
+  6. Phased admission prefill grids are pow2-BUCKETED: ragged chunk
+     counts round up to the next power of two with all-zero-valid tail
+     chunks (frozen lanes), bounding compilations like the decode
+     drain-split buckets — and the masked tail never moves a token.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.serve import PrefixCache, Request, Scheduler, Status, build_engine
+from repro.serve.prefix_cache import state_row_bytes
+
+ALL_POLICIES = ["trimkv", "streaming_llm", "h2o", "snapkv", "rkv",
+                "keydiff", "full"]
+C = 8  # prefill chunk used throughout the serving tests
+
+
+# ------------------------------------------------------- trie unit tests
+
+
+def _row(tag: int, n: int = 4):
+    """A fake slab row: any pytree of arrays works — the cache only
+    sums leaf nbytes and stores the object."""
+    return {"x": np.full((n,), tag, np.float32)}
+
+
+SLAB = state_row_bytes(_row(0))
+
+
+def _toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def test_trie_longest_prefix_under_limit():
+    pc = PrefixCache(10 * SLAB)
+    a = np.arange(12, dtype=np.int32)
+    assert pc.insert(a[:8], _row(1))
+    assert pc.insert(a, _row(2))
+    assert pc.lookup(a, limit=12).n_tokens == 12
+    # limit excludes the deeper entry -> falls back to the 8-token one
+    assert pc.lookup(a, limit=11).n_tokens == 8
+    assert pc.lookup(a, limit=7) is None
+    assert pc.lookup(_toks(99, 98, 97)) is None
+    # duplicate key refreshes, never duplicates
+    assert not pc.insert(a[:8], _row(3))
+    assert pc.stats()["entries"] == 2
+
+
+def test_trie_mid_edge_split():
+    pc = PrefixCache(10 * SLAB)
+    k1 = _toks(1, 2, 3, 4, 5, 6, 7, 8)
+    k2 = _toks(1, 2, 3, 9, 9)
+    assert pc.insert(k1, _row(1))
+    assert pc.insert(k2, _row(2))  # splits k1's edge at depth 3
+    assert pc.lookup(k1).n_tokens == 8
+    assert pc.lookup(k2).n_tokens == 5
+    probe = _toks(1, 2, 3, 4, 5, 6, 7, 8, 50, 51)
+    assert pc.lookup(probe).n_tokens == 8
+    assert pc.lookup(_toks(1, 2, 3)) is None  # split node has no entry
+
+
+def test_lru_evicts_coldest_unpinned():
+    pc = PrefixCache(2 * SLAB)
+    e1, e2, e3 = _toks(1, 1), _toks(2, 2), _toks(3, 3)
+    assert pc.insert(e1, _row(1)) and pc.insert(e2, _row(2))
+    pc.lookup(e1)                      # e2 is now the coldest
+    assert pc.insert(e3, _row(3))
+    assert pc.lookup(e2) is None and pc.lookup(e1) is not None
+    assert pc.lookup(e3) is not None
+    assert pc.stats()["evictions"] == 1
+    assert pc.bytes_used == 2 * SLAB
+
+
+def test_ttl_expiry_skips_pinned():
+    now = [0.0]
+    pc = PrefixCache(10 * SLAB, ttl_sec=5.0, clock=lambda: now[0])
+    a, b = _toks(1, 2, 3), _toks(4, 5, 6)
+    pc.insert(a, _row(1))
+    pc.insert(b, _row(2))
+    assert pc.lookup(a, pin=7) is not None   # pin a for rid 7
+    now[0] = 10.0                            # both past TTL
+    assert pc.lookup(b) is None              # b expired
+    assert pc.lookup(a) is not None          # pinned a survives
+    assert pc.stats()["expirations"] == 1
+    pc.release(7)
+    now[0] = 20.0
+    assert pc.lookup(a) is None              # released -> expirable
+    assert pc.stats()["entries"] == 0
+
+
+def test_pins_block_eviction_then_release_unblocks():
+    pc = PrefixCache(1 * SLAB)
+    a, b = _toks(1, 2), _toks(3, 4)
+    assert pc.insert(a, _row(1))
+    assert pc.lookup(a, pin=42) is not None
+    assert not pc.insert(b, _row(2))         # pinned a cannot be evicted
+    assert pc.stats()["rejected"] == 1
+    pc.release(42)
+    pc.release(42)                           # idempotent
+    assert pc.insert(b, _row(2))             # now a is the LRU victim
+    assert pc.lookup(a) is None
+    assert pc.stats()["evictions"] == 1
+
+
+def test_capacity_guards():
+    with pytest.raises(ValueError):
+        PrefixCache(0)
+    pc = PrefixCache(SLAB)
+    assert not pc.insert(_toks(1), _row(0, n=4096))  # slab > capacity
+    assert pc.stats()["rejected"] == 1
+
+
+def test_observe_longest_shared_prefix():
+    pc = PrefixCache(SLAB, observe_window=2)
+    pool = np.arange(10, dtype=np.int32)
+    assert pc.observe(np.concatenate([pool, _toks(90)])) == 0
+    assert pc.observe(np.concatenate([pool[:6], _toks(91)])) == 6
+    assert pc.observe(_toks(50, 51)) == 0
+    assert pc.observe(_toks(60, 61)) == 0
+    # window of 2: the pool prompts have fallen out by now
+    assert pc.observe(np.concatenate([pool, _toks(92)])) == 0
+    assert pc.observe(np.concatenate([pool, _toks(93)])) == 10
+
+
+def test_remove_prunes_dead_branches():
+    now = [0.0]
+    pc = PrefixCache(10 * SLAB, ttl_sec=1.0, clock=lambda: now[0])
+    pc.insert(_toks(1, 2, 3, 4), _row(1))
+    pc.insert(_toks(1, 2, 9), _row(2))
+    now[0] = 10.0
+    assert pc.lookup(_toks(1, 2, 3, 4)) is None  # expires both
+    assert pc.stats() == {"entries": 0, "bytes": 0, "inserts": 2,
+                          "evictions": 0, "expirations": 2,
+                          "rejected": 0, "pinned": 0}
+    assert not pc._root.children            # trie pruned to the root
+
+
+# ------------------------------------------------ serving: parity matrix
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(
+        get_smoke_config("trimkv-paper-4b"), num_layers=2, d_model=64,
+        d_ff=128, num_heads=4, num_kv_heads=2, vocab_size=64,
+        gate_bias_init=3.0)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    gates = T.init_gate_params(jax.random.PRNGKey(1), cfg)
+    return cfg, params, gates
+
+
+def _shared_requests(pools, tails, max_new, seed0=10, vocab=64):
+    """Prompts = pool (shared hot prefix) + ragged private tail."""
+    rng = np.random.RandomState(3)
+    pool_toks = [rng.randint(0, vocab, size=L).astype(np.int32)
+                 for L in pools]
+    reqs = []
+    for i, (p, t, m) in enumerate(zip(
+            np.resize(np.arange(len(pools)), len(tails)), tails,
+            max_new)):
+        prompt = np.concatenate(
+            [pool_toks[p], rng.randint(0, vocab, size=t).astype(np.int32)])
+        reqs.append(Request(rid=i, prompt=prompt, max_new=m,
+                            seed=seed0 + i))
+    return reqs
+
+
+def _oneshot(cfg, params, gates, req, *, policy, attn_impl="xla",
+             **serve_kw):
+    eng = build_engine(cfg, params, gates, policy=policy,
+                       attn_impl=attn_impl, **serve_kw)
+    return eng.generate(req.prompt[None], req.max_new, chunked=True,
+                        greedy=True, seed=req.seed)["ids"][0]
+
+
+def _formula(sched):
+    return (sched.n_prefill_rounds + sched.n_segments + sched.n_resets
+            + sched.n_swaps + sched.n_resumes + sched.n_faults_injected
+            + sched.n_prefix_installs + sched.n_prefix_extracts)
+
+
+def _drain(eng, reqs, **kw):
+    """One scheduler drain with the dispatch formula asserted exactly
+    and every pin released."""
+    eng.dispatch_count = 0
+    sched = Scheduler(eng, n_lanes=2, **kw)
+    res = sched.run(reqs)
+    assert all(res[r.rid].status is Status.DONE for r in reqs)
+    assert eng.dispatch_count == _formula(sched), \
+        (eng.dispatch_count, _formula(sched))
+    st = sched.stats()
+    assert st["prefix_pinned"] == 0
+    return res, sched
+
+
+@pytest.mark.parametrize("attn_impl", ["xla", "pallas"])
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_prefix_parity_all_policies(tiny, policy, attn_impl):
+    """Cold serve, warm serve (same engine -> same trie), both
+    admission modes: every drain token-identical to one-shot, formula
+    exact every time, and the warm drains hit on every request."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=C)
+    reqs = _shared_requests([24], [5, 11, 3, 9, 6], [6, 3, 8, 5, 7])
+    eng = build_engine(cfg, params, gates, policy=policy,
+                       attn_impl=attn_impl, decode_segment=4,
+                       prefix_cache_bytes=1 << 22, prefix_min_tokens=C,
+                       **serve)
+    runs = {}
+    runs["phased_cold"] = _drain(eng, reqs, interleaved=False)
+    runs["phased_warm"] = _drain(eng, reqs, interleaved=False)
+    runs["inter_warm"] = _drain(eng, reqs, interleaved=True)
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy=policy,
+                        attn_impl=attn_impl, **serve)
+        for name, (res, _) in runs.items():
+            np.testing.assert_array_equal(
+                res[r.rid].ids, want, err_msg=f"{name} rid={r.rid}")
+    # cold run captured the pool (2nd sighting) and chained hits off it
+    cold = runs["phased_cold"][1].stats()
+    assert cold["n_prefix_hits"] > 0 and cold["prefix_inserts"] > 0
+    # warm runs hit every probe and skip 24 pool tokens per request
+    for name in ("phased_warm", "inter_warm"):
+        st = runs[name][1].stats()
+        assert st["n_prefix_hits"] == len(reqs), name
+        assert st["n_prefix_misses"] == 0, name
+        # every hit covers at least the 24-token pool; chained captures
+        # may deepen entries past it, so >= not ==
+        assert st["n_prefix_reused_tokens"] >= 24 * len(reqs), name
+    # interleaved hits dispatch the slab scatter as its own program
+    inter = runs["inter_warm"][1]
+    assert inter.n_prefix_installs > 0
+    assert runs["phased_warm"][1].n_prefix_installs == 0  # rides admission
+
+
+@pytest.mark.parametrize("interleaved", [False, True])
+def test_lru_churn_under_serving_keeps_formula(tiny, interleaved):
+    """A deliberately undersized budget (1.5 slabs) with three hot
+    pools: captures evict each other mid-serve, yet every request
+    completes token-identically to one-shot and the dispatch formula
+    stays exact."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=C)
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=4, prefill_chunk=C, budget=16)
+    slab = state_row_bytes(eng.fresh_lane_row())
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=4,
+                       prefix_cache_bytes=int(1.5 * slab),
+                       prefix_min_tokens=C, **serve)
+    # pools appear twice in a row (2nd sighting captures), then a new
+    # pool's capture must evict the previous slab
+    tails = [5, 7, 4, 6, 5, 8]
+    pools = [16, 16, 16]            # three 16-token pools, rotating
+    reqs = _shared_requests(pools, tails, [4] * len(tails))
+    res, sched = _drain(eng, reqs, interleaved=interleaved)
+    st = sched.stats()
+    assert st["prefix_evictions"] + st["prefix_rejected"] > 0, st
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy="trimkv", **serve)
+        np.testing.assert_array_equal(res[r.rid].ids, want)
+
+
+def test_min_tokens_gate_disables_short_prefixes(tiny):
+    """prefix_min_tokens above every shared prefix: no hits, no
+    captures, no cache traffic at all — but serving is unaffected."""
+    cfg, params, gates = tiny
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=4, budget=16, prefill_chunk=C,
+                       prefix_cache_bytes=1 << 22,
+                       prefix_min_tokens=1000)
+    reqs = _shared_requests([24], [5, 11, 3], [4, 4, 4])
+    for interleaved in (False, True):
+        _, sched = _drain(eng, reqs, interleaved=interleaved)
+        st = sched.stats()
+        assert st["n_prefix_hits"] == 0
+        assert st["prefix_inserts"] == 0
+
+
+def test_cross_memory_engines_bypass_prefix_cache():
+    """encdec: the engine owns a trie (config asked for one) but the
+    scheduler opts OUT — a cached slab cannot carry the lane's
+    cross-attention memory — so no prefix counters appear and the
+    serve completes normally."""
+    cfg = get_smoke_config("seamless-m4t-large-v2")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    gates = T.init_gate_params(jax.random.PRNGKey(1), cfg)
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=4, budget=16, prefill_chunk=C,
+                       prefix_cache_bytes=1 << 22, prefix_min_tokens=C)
+    assert eng.prefix_cache is not None
+    rng = np.random.RandomState(5)
+    reqs = [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab_size,
+                                       size=12).astype(np.int32),
+                    max_new=4, seed=i,
+                    extra_inputs={"source_embeds":
+                                  rng.randn(cfg.source_len, cfg.d_model)
+                                  .astype(np.float32) * 0.1})
+            for i in range(2)]
+    sched = Scheduler(eng, n_lanes=2)
+    assert sched._pc is None
+    res = sched.run(reqs)
+    assert all(res[r.rid].status is Status.DONE for r in reqs)
+    assert "n_prefix_hits" not in sched.stats()
+    assert eng.prefix_cache.n_entries == 0
+
+
+def test_phased_prefill_grids_bucket_to_pow2(tiny):
+    """Ragged chunk counts (3 and 5 chunks here) round up to pow2
+    grids (4 and 8) with masked all-invalid tail chunks — compile
+    count is bounded like the decode drain-split buckets, and the
+    frozen tail never moves a token (one-shot parity)."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=C)
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=4, **serve)
+    # the grid is batch-max sized, so two admission rounds (2 lanes,
+    # 4 requests) exercise two distinct buckets: 3 chunks -> 4 and
+    # 5 chunks -> 8
+    reqs = _shared_requests([0], [17, 17, 33, 33], [4, 4, 4, 4])
+    eng.dispatch_count = 0
+    sched = Scheduler(eng, n_lanes=2, interleaved=False)
+    res = sched.run(reqs)
+    assert sched.prefill_bucket_lengths >= {4, 8}, \
+        sched.prefill_bucket_lengths
+    for b in sched.prefill_bucket_lengths:
+        assert (b & (b - 1)) == 0, f"bucket {b} not pow2"
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy="trimkv", **serve)
+        np.testing.assert_array_equal(res[r.rid].ids, want)
