@@ -12,7 +12,7 @@ from benchmarks import (fig3_pareto, fig5_interpretability, roofline,
                         table1_longproc, table3_longmem, table5_ablation,
                         table6_throughput, table7_serving, table8_slo,
                         table9_chunked_prefill, table10_faults,
-                        table11_store, table12_prefix)
+                        table11_store, table12_prefix, table13_spec)
 
 BENCHES = (
     ("fig3_pareto", fig3_pareto.run),
@@ -26,6 +26,7 @@ BENCHES = (
     ("table10_faults", table10_faults.run),
     ("table11_store", table11_store.run),
     ("table12_prefix", table12_prefix.run),
+    ("table13_spec", table13_spec.run),
     ("fig5_interpretability", fig5_interpretability.run),
     ("roofline", roofline.run),
 )

@@ -251,6 +251,18 @@ class ServeConfig:
     # shared (longest common prefix vs recently observed prompts), so
     # entries stay hittable and parity-exact.
     prefix_min_tokens: int = 0
+    # --- speculative decoding (PR 9, docs/serving.md §Speculative
+    # decoding) ---
+    # spec_k: drafted tokens per verify round (0 = off). Each decode
+    # segment round drafts spec_k tokens per live lane from its
+    # retained token history (n-gram self-drafting), scores all
+    # spec_k + 1 positions in ONE chunk-shaped dispatch and commits the
+    # longest greedy-agreeing prefix — rejected positions are rolled
+    # back before they touch durable cache state, so greedy outputs
+    # stay token-identical to spec_k = 0. Greedy-only: the scheduler
+    # silently disables speculation under temperature sampling. MoE
+    # family refuses spec_k > 0 (expert capacity couples tokens).
+    spec_k: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

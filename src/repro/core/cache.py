@@ -119,7 +119,7 @@ def memory_attend(q_t, xk, xv, mem_len):
 
 
 def cache_insert(cache, k_t, v_t, beta_t, t, keep_scores_fn,
-                 incoming_score=None, incoming_aux=None):
+                 incoming_score=None, incoming_aux=None, active=None):
     """Insert one token; evict the lowest-keep-score entry if full.
 
     k_t, v_t: [B, Hkv, Dh] (k post-RoPE); beta_t: [B, Hkv]; t: position
@@ -133,6 +133,11 @@ def cache_insert(cache, k_t, v_t, beta_t, t, keep_scores_fn,
     token is always admitted (incoming_score=None -> +inf).
     incoming_aux: optional [B, Hkv] initial aux for the new token (H2O
     attention mass it received on its own step).
+
+    active: optional [B] bool — lanes marked False insert NOTHING (no
+    victim overwritten, no metadata touched): the speculative-verify
+    replay path (cache_replay) uses it to skip rejected positions and
+    the decode path uses it to freeze retired lanes.
     """
     M = cache["pos"].shape[-1]
     scores = keep_scores_fn(cache, t)                       # [B,H,M]
@@ -144,6 +149,8 @@ def cache_insert(cache, k_t, v_t, beta_t, t, keep_scores_fn,
         inc = jnp.broadcast_to(jnp.asarray(incoming_score, jnp.float32),
                                victim_score.shape)
     write = inc >= victim_score                             # [B,H] bool
+    if active is not None:
+        write = write & active[:, None]
 
     # Slot update = SELECT on an iota mask. Two refuted alternatives
     # (§Perf iterations 3/5):
@@ -170,6 +177,59 @@ def cache_insert(cache, k_t, v_t, beta_t, t, keep_scores_fn,
               else incoming_aux[..., None].astype(jnp.float32))
     new["aux"] = jnp.where(mask, aux_in, cache["aux"])
     return new
+
+
+def cache_replay(cache, k_c, v_c, beta_c, probs_kv_c, aux_new_c, t,
+                 n_commit, live, policy, incoming_score=None):
+    """Bounded rollback/commit for speculative decoding (docs/serving.md
+    §Speculative decoding): replay the first n_commit[b] positions'
+    decode-time cache transactions — policy.decode_update (eviction-
+    signal accumulation) then cache_insert (victim argmin + in-place
+    overwrite) — from the ROUND-ENTRY cache, in position order, using
+    the per-position signals the verify pass recorded.
+
+    k_c, v_c: [B, C, Hkv, Dh]; beta_c, aux_new_c: [B, C, Hkv];
+    probs_kv_c: [B, C, Hkv, M] (per-kv-head attention mass each
+    position put on the cache slots at its own step); t: round-entry
+    clock (scalar or [B]); n_commit: [B] int32 accepted-prefix length
+    (0..C); live: [B] bool.
+
+    Because each position replays the EXACT transaction sequential
+    decode would have run (same scores, same argmin victim, same masked
+    select) and rejected positions (j >= n_commit) are masked out of
+    the write entirely, the result is bit-identical to having decoded
+    only the accepted prefix: a rejected token never perturbs victim
+    selection, beta/aux, or slot positions. That is the whole rollback
+    contract — no pos := -1 sweep is ever needed because rejected
+    tokens never reach the durable cache in the first place.
+    """
+    C = k_c.shape[1]
+
+    def step(cache, xs):
+        k_t, v_t, beta_t, pkv, auxn, j = xs
+        mask = live & (j < n_commit)
+        new = policy.decode_update(cache, pkv, active=mask)
+        new = cache_insert(new, k_t, v_t, beta_t, t + j,
+                           policy.keep_scores,
+                           incoming_score=incoming_score,
+                           incoming_aux=(auxn if policy.needs_attn
+                                         else None),
+                           active=mask)
+        # belt-and-braces per-step lane select, mirroring the decode
+        # path's _select_rows: masked lanes keep the old leaves
+        # bit-identically even where an op is only value-neutral
+        # (e.g. aux + 0.0 under H2O)
+        sel = jax.tree.map(
+            lambda n, o: jnp.where(
+                mask.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            new, cache)
+        return sel, None
+
+    xs = tuple(jnp.moveaxis(a, 1, 0)
+               for a in (k_c, v_c, beta_c, probs_kv_c, aux_new_c))
+    xs += (jnp.arange(C, dtype=jnp.int32),)
+    cache, _ = jax.lax.scan(step, cache, xs)
+    return cache
 
 
 def cache_topm_merge(cache, k_c, v_c, beta_c, pos_c, aux_c, t,

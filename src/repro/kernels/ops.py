@@ -87,6 +87,16 @@ def capacity_loss(beta, M: float, *, impl="auto"):
 def decode_attention(q_t, k_cache, v_cache, pos, t, *, window=0,
                      new_kv=None, return_probs=False, m_block=512,
                      impl="auto"):
+    """One decode position's flash attention over the slot cache (plus
+    the provisional new token when new_kv is given), returning the
+    per-slot probs / in-flight mass the eviction policies consume.
+    t may be a scalar or a per-lane [B] clock. Speculative verify
+    (models.blocks.apply_block_verify) calls this once per candidate
+    position against an evolving scratch cache — the SAME kernel
+    reconstructs the eviction signals (probs, p_new) for speculated
+    positions exactly as for real ones, which is what lets the commit
+    phase replay accepted positions bit-identically and discard
+    rejected ones without ever touching durable cache state."""
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "pallas":

@@ -123,7 +123,8 @@ def _run_stream(cfg, params, gates, args):
                        snapshot_host_bytes=args.snapshot_host_bytes,
                        prefix_cache_bytes=args.prefix_cache_bytes,
                        prefix_ttl_sec=args.prefix_ttl_sec,
-                       prefix_min_tokens=args.prefix_min_tokens)
+                       prefix_min_tokens=args.prefix_min_tokens,
+                       spec_k=args.spec_k)
     reqs = poisson_requests(
         args.requests, args.rate, vocab=cfg.vocab_size,
         prompt_lo=max(args.prompt_len // 4, 4), prompt_hi=args.prompt_len,
@@ -206,6 +207,16 @@ def _run_stream(cfg, params, gates, args):
               f"evictions={st['prefix_evictions']} "
               f"entries={st['prefix_entries']} "
               f"bytes={st['prefix_bytes']}")
+    if sched.spec_k > 0:
+        # speculative decoding (docs/serving.md §Speculative decoding):
+        # mean acceptance length is committed tokens per live verify
+        # round — > 1 means speculation is paying for its drafts
+        acc = st["n_spec_tokens"] / max(st["n_spec_rounds"], 1)
+        print(f"  speculative: spec_k={sched.spec_k} "
+              f"verify_rounds={st['n_verify_rounds']} "
+              f"spec_rounds={st['n_spec_rounds']} "
+              f"spec_tokens={st['n_spec_tokens']} "
+              f"mean_acceptance={acc:.2f}")
     if args.inject_faults:
         from repro.serve.request import TERMINAL_STATUSES
         n_terminal = sum(rs.status in TERMINAL_STATUSES
@@ -359,6 +370,14 @@ def main():
     ap.add_argument("--zipf-alpha", type=float, default=1.1,
                     help="--prefix-pools: Zipf popularity exponent of "
                          "the pool draw (higher = hotter head)")
+    # --- speculative decoding (PR 9, docs/serving.md §Speculative
+    # decoding) ---
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="--stream: drafted tokens per verify round "
+                         "(0 = off). Greedy-only n-gram self-drafting "
+                         "from each lane's token history; all spec_k+1 "
+                         "positions verify in one chunk-shaped "
+                         "dispatch, outputs stay token-identical")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

@@ -18,8 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gates as gates_lib
-from repro.core.cache import (cache_insert, cache_topm_merge, decode_attend,
-                              init_cache, memory_attend, memory_pos)
+from repro.core.cache import (cache_insert, cache_replay, cache_topm_merge,
+                              decode_attend, init_cache, memory_attend,
+                              memory_pos)
 from repro.core.losses import capacity_loss_chunked
 from repro.models.common import (NEG_INF, apply_rope, chunked_attention,
                                  dense_apply, dense_init, mlp_apply,
@@ -552,7 +553,7 @@ def _select_rows(mask, new, old):
 
 
 def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy,
-                       attn_impl="xla", active=None):
+                       attn_impl="xla", active=None, return_sig=False):
     """x_t: [B, d]; t: absolute position — scalar int32, or [B] when
     each lane runs on its own clock (continuous batching). Returns
     (x_out [B,d], new_state, probs_or_None). attn_impl: "xla" (grouped
@@ -560,7 +561,13 @@ def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy,
     interpret mode off-TPU). active: optional [B] bool — lanes marked
     False are masked to the identity: their caches, recurrences and
     policy aux come back bit-identical (retired/empty scheduler
-    lanes)."""
+    lanes). return_sig: the speculative verify path (phase A) — the
+    third return becomes this position's commit signal instead of the
+    raw probs: attention kinds -> {k, v, beta, pkv, auxn} (everything
+    cache_replay needs to re-run the eviction transaction), recurrent/
+    mamba -> the unmasked {h, conv} tail snapshot. The signal is a
+    byproduct of values this function computes anyway, so requesting
+    it cannot perturb the decode result."""
     if kind in ("global", "local", "cross"):
         cache = state["cache"] if kind == "cross" else state
         normed = rmsnorm_apply(p["norm1"], x_t, cfg.norm_eps)
@@ -587,8 +594,8 @@ def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy,
         else:
             out, probs, p_new = decode_attend(q_t, cache, window=window,
                                               t=t, new_kv=(k_t, v_t))
-        cache = policy.decode_update(cache, _probs_to_kv(probs, cfg),
-                                     active=active)
+        pkv = _probs_to_kv(probs, cfg)
+        cache = policy.decode_update(cache, pkv, active=active)
         inc = 1.0 if policy.name == "trimkv" else None
         aux_new = (_probs_to_kv(p_new[..., None], cfg)[..., 0]
                    if policy.needs_attn else None)
@@ -610,6 +617,12 @@ def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy,
                      if kind == "cross" else cache)
         if active is not None:
             new_state = _select_rows(active, new_state, state)
+        if return_sig:
+            auxn = (aux_new if aux_new is not None
+                    else _probs_to_kv(p_new[..., None], cfg)[..., 0])
+            sig = {"k": k_t, "v": v_t, "beta": beta_t, "pkv": pkv,
+                   "auxn": auxn}
+            return x + ffn_out[:, 0], new_state, sig
         return x + ffn_out[:, 0], new_state, probs
     if kind == "recurrent":
         normed = rmsnorm_apply(p["norm1"], x_t, cfg.norm_eps)
@@ -625,15 +638,17 @@ def apply_block_decode(p, g, cfg, kind, x_t, state, t, *, policy,
         x = x_t + dense_apply(p["out"], (h.astype(x_t.dtype) * gate))
         normed2 = rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
         ffn_out, _ = _ffn_apply(p["ffn"], normed2[:, None], cfg)
-        new_state = {"h": h, "conv": conv_state}
+        sig = {"h": h, "conv": conv_state}
+        new_state = sig
         if active is not None:
             new_state = _select_rows(active, new_state, state)
-        return x + ffn_out[:, 0], new_state, None
+        return x + ffn_out[:, 0], new_state, (sig if return_sig else None)
     if kind == "mamba":
-        out, new_state = _mamba_step(p, cfg, x_t, state)
+        out, sig = _mamba_step(p, cfg, x_t, state)
+        new_state = sig
         if active is not None:
             new_state = _select_rows(active, new_state, state)
-        return x_t + out, new_state, None
+        return x_t + out, new_state, (sig if return_sig else None)
     raise ValueError(kind)
 
 
@@ -694,6 +709,111 @@ def _mamba_step(p, cfg, x_t, state):
     y = y + xs.astype(jnp.float32) * p["D"]
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
     return dense_apply(p["out_proj"], y), {"h": h, "conv": conv_state}
+
+
+# ============================================ block: speculative verify
+#
+# Draft/verify speculative decoding (docs/serving.md §Speculative
+# decoding) scores C = spec_k + 1 candidate positions per lane in ONE
+# dispatch, in two phases:
+#
+#   * apply_block_verify (phase A, "score"): an inner lax.scan runs
+#     apply_block_decode ITSELF — the same function, on the same
+#     [B, d] shapes — once per candidate position against an evolving
+#     SCRATCH copy of the block state, with return_sig=True so each
+#     position's eviction transaction (k/v/beta, per-slot probs,
+#     incoming aux — on the pallas impl straight from the flash-decode
+#     kernel's probs/p_new outputs, i.e. the kernels reconstruct the
+#     eviction signal for speculated positions exactly as for real
+#     ones) is recorded on the side. Because every op is literally the
+#     decode op at the decode shape, the logits at every correctly-fed
+#     position are bit-identical to sequential decode BY CONSTRUCTION
+#     (no reliance on chunk-vs-decode GEMM accumulation order, which
+#     XLA does NOT guarantee row-stable across batch shapes): position
+#     0 is always fed the true carry, and if draft j-1 matched the
+#     model's token, position j saw exactly the cache sequential
+#     decode would have had. The scratch state is DISCARDED.
+#   * apply_block_verify_commit (phase B, "commit" = bounded rollback):
+#     once the accepted prefix length n_commit[b] is known, replay only
+#     the first n_commit positions' transactions from the ROUND-ENTRY
+#     state (core.cache.cache_replay); rejected positions never touch
+#     durable state, so they cannot have perturbed victim selection
+#     under ANY eviction policy. Recurrent/SSM/conv tails are committed
+#     by selecting the stacked per-position snapshot at n_commit - 1.
+#
+# MoE blocks are NOT verifiable: _moe_apply's expert capacity couples
+# rows across (B, T), breaking per-row bit-identity — the serving layer
+# refuses spec_k > 0 for that family (the same coupling already breaks
+# its dense parity oracle, see ROADMAP).
+
+
+def apply_block_verify(p, g, cfg, kind, x, state, t, *, policy,
+                       attn_impl="xla", live=None):
+    """Phase A of a speculative verify round. x: [B, C, d] residual
+    stream for the C candidate positions; t: round-entry per-lane clock
+    ([B] or scalar); live: [B] bool lanes in this round. Returns
+    (x_out [B, C, d], sig) where sig carries everything phase B needs,
+    stacked on axis 1: attention kinds -> {k, v, beta, pkv, auxn}
+    per-position eviction signals; recurrent/mamba -> {h, conv}
+    per-position state snapshots. The state itself is NOT mutated (the
+    scratch state the inner scan evolves is discarded)."""
+    B, C, _ = x.shape
+    if live is None:
+        live = jnp.ones((B,), bool)
+    if cfg.family == "moe" and cfg.num_experts > 0:
+        raise ValueError(
+            "speculative verify is unsupported for MoE blocks: expert "
+            "capacity couples tokens across the [B, C] grid, so "
+            "speculative scoring cannot be bit-identical per row")
+    tb = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+
+    def step(st, xs):
+        x_t, j = xs
+        x_o, st, sig_t = apply_block_decode(
+            p, g, cfg, kind, x_t, st, tb + j, policy=policy,
+            attn_impl=attn_impl, active=live, return_sig=True)
+        return st, (x_o, sig_t)
+
+    _, (rows, sig_c) = jax.lax.scan(
+        step, state,
+        (jnp.moveaxis(x, 1, 0), jnp.arange(C, dtype=jnp.int32)))
+    return (jnp.moveaxis(rows, 0, 1),
+            jax.tree.map(lambda a: jnp.moveaxis(a, 0, 1), sig_c))
+
+
+def apply_block_verify_commit(cfg, kind, state, sig, t, n_commit, live,
+                              policy):
+    """Phase B of a speculative verify round: commit the accepted
+    prefix (bounded rollback). state: the ROUND-ENTRY block state;
+    sig: apply_block_verify's per-position signal pack; n_commit: [B]
+    accepted-prefix length (0..C, 0 for non-live lanes); t: round-entry
+    clock. Attention kinds replay the first n_commit positions' cache
+    transactions (core.cache.cache_replay — rejected positions never
+    touch durable state); recurrent/mamba tails select the stacked
+    snapshot at position n_commit - 1; cross xk/xv/mem_len are
+    untouched (memory is read-only at decode). Returns the new block
+    state, bit-identical to sequentially decoding only the accepted
+    prefix."""
+    if kind in ("global", "local", "cross"):
+        cache = state["cache"] if kind == "cross" else state
+        inc = 1.0 if policy.name == "trimkv" else None
+        new_cache = cache_replay(cache, sig["k"], sig["v"], sig["beta"],
+                                 sig["pkv"], sig["auxn"], t, n_commit,
+                                 live, policy, incoming_score=inc)
+        if kind == "cross":
+            return {"cache": new_cache, "xk": state["xk"],
+                    "xv": state["xv"], "mem_len": state["mem_len"]}
+        return new_cache
+    take = live & (n_commit > 0)
+
+    def sel(stacked, old):
+        idx = jnp.maximum(n_commit - 1, 0).astype(jnp.int32)
+        idx = idx.reshape((-1,) + (1,) * (stacked.ndim - 1))
+        picked = jnp.take_along_axis(stacked, idx, axis=1)[:, 0]
+        m = take.reshape((-1,) + (1,) * (old.ndim - 1))
+        return jnp.where(m, picked, old)
+
+    return {kk: sel(sig[kk], state[kk]) for kk in ("h", "conv")}
 
 
 # ====================================================== block: prefill

@@ -832,6 +832,321 @@ def mixed_step_loop(params, gate_params, cfg, state, tok, keys, active,
             jnp.moveaxis(toks, 0, 1), jnp.moveaxis(emits, 0, 1), ok)
 
 
+# ------------------------------------------- speculative decode (PR 9)
+#
+# Draft/verify speculative decoding inside the fused segments: each
+# ROUND drafts spec_k tokens per live lane from its retained token
+# history (n-gram self-drafting; pluggable), scores all C = spec_k + 1
+# candidate positions in ONE chunk-shaped dispatch
+# (blocks.apply_block_verify), accepts the longest agreeing greedy
+# prefix and commits exactly those positions' cache transactions
+# (blocks.apply_block_verify_commit — bounded rollback; rejected
+# positions never touch durable state). Greedy outputs are
+# token-identical to the non-speculative path by construction
+# (tests/test_speculative.py asserts it across every policy × impl ×
+# admission mode). Speculation is GREEDY-ONLY: under temperature
+# sampling acceptance would need stochastic verification, which cannot
+# be bit-identical to the per-token key chain (the scheduler refuses
+# spec_k > 0 off the greedy path).
+
+SPEC_HISTORY = 64  # per-lane token-history window the drafter sees
+
+
+def ngram_draft(hist, tok, k):
+    """Self-draft k tokens from the lane's token history. hist: [B, H]
+    int32 — the tokens emitted BEFORE the current carry, left-padded
+    with -1, most recent last; tok: [B] the current carry token.
+    Finds the most recent earlier occurrence of the bigram
+    (hist[-1], tok) and proposes its continuation; lanes with no match
+    (or a continuation running off the known history) fall back to
+    repeating the carry token — a free win on degenerate greedy cycles.
+    Returns drafts [B, k] int32 (always valid vocab ids)."""
+    B, H = hist.shape
+    ext = jnp.concatenate([hist, tok[:, None]], axis=1)      # [B, H+1]
+    last, prev = ext[:, -1], ext[:, -2]
+    p = jnp.arange(1, H, dtype=jnp.int32)                    # [H-1]
+    match = ((ext[:, 1:H] == last[:, None]) &
+             (ext[:, 0:H - 1] == prev[:, None]) &
+             (ext[:, 1:H] >= 0) & (ext[:, 0:H - 1] >= 0))
+    best = jnp.max(jnp.where(match, p[None], -1), axis=1)    # [B]
+    has = best >= 0
+    idx = best[:, None] + jnp.arange(1, k + 1, dtype=jnp.int32)[None]
+    cont = jnp.take_along_axis(ext, jnp.clip(idx, 0, H), axis=1)
+    valid = has[:, None] & (idx <= H) & (cont >= 0)
+    return jnp.where(valid, cont, tok[:, None]).astype(jnp.int32)
+
+
+def _verify_forward(params, gate_params, cfg, state, fed, live, policy,
+                    attn_impl="xla"):
+    """Phase A of a verify round: score all C candidate positions
+    (fed [B, C] int32) through the stack WITHOUT mutating state — each
+    block replays the literal decode recipe per position on a scratch
+    state (blocks.apply_block_verify), so the logits are bit-identical
+    to sequential decode at every correctly-fed position. Returns
+    (logits [B, C, Vp] f32, sigs) where sigs mirrors the state layout
+    ({layers: stacked, tail: tuple}) holding each block's per-position
+    commit signals."""
+    unit, U, R, tail = _unit_and_counts(cfg)
+    x = jnp.take(params["embed"], fed, axis=0)               # [B,C,d]
+    t = state["t"]
+
+    def unit_body(x, xs):
+        up, ug, st = xs
+        sigs = []
+        for i, kind in enumerate(unit):
+            g = ug[i] if ug is not None else None
+            x, sig = blocks.apply_block_verify(
+                up[i], g, cfg, kind, x, st[i], t, policy=policy,
+                attn_impl=attn_impl, live=live)
+            sigs.append(sig)
+        return x, tuple(sigs)
+
+    sigs = {"layers": None}
+    if R > 0:
+        glayers = (gate_params or {}).get("layers")
+        x, stacked = jax.lax.scan(
+            unit_body, x, (params["layers"], glayers, state["layers"]),
+            unroll=R if cfg.unroll_layers else 1)
+        sigs["layers"] = stacked
+    tail_sigs = []
+    for i, kind in enumerate(tail):
+        g = (gate_params or {}).get("tail", (None,) * len(tail))[i]
+        x, sig = blocks.apply_block_verify(
+            params["tail"][i], g, cfg, kind, x, state["tail"][i], t,
+            policy=policy, attn_impl=attn_impl, live=live)
+        tail_sigs.append(sig)
+    sigs["tail"] = tuple(tail_sigs)
+
+    # final norm + unembed per position at the decode shape [B, d] —
+    # chunk-shaped GEMMs are NOT row-bit-identical across batch shapes
+    # on every backend, and verify parity is bit-exact by construction
+    def lstep(_, x_t):
+        h = rmsnorm_apply(params["final_norm"], x_t, cfg.norm_eps)
+        return None, compute_logits(params, cfg, h)
+
+    _, lg = jax.lax.scan(lstep, None, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(lg, 0, 1), sigs
+
+
+def _verify_commit(cfg, state, sigs, n_commit, live, policy):
+    """Phase B of a verify round: commit each lane's accepted prefix
+    (n_commit [B], 0 for non-live lanes) from the round-entry state
+    using phase A's signals. Bit-identical to having decode_step'ped
+    only the accepted tokens (blocks.apply_block_verify_commit)."""
+    unit, U, R, tail = _unit_and_counts(cfg)
+    t = state["t"]
+    new_state = {"t": t + n_commit}
+
+    def unit_body(carry, xs):
+        st, sg = xs
+        new = tuple(
+            blocks.apply_block_verify_commit(cfg, unit[i], st[i], sg[i],
+                                             t, n_commit, live, policy)
+            for i in range(U))
+        return carry, new
+
+    if R > 0:
+        _, stacked = jax.lax.scan(
+            unit_body, None, (state["layers"], sigs["layers"]),
+            unroll=R if cfg.unroll_layers else 1)
+        new_state["layers"] = stacked
+    else:
+        new_state["layers"] = None
+    new_state["tail"] = tuple(
+        blocks.apply_block_verify_commit(cfg, tail[i], state["tail"][i],
+                                         sigs["tail"][i], t, n_commit,
+                                         live, policy)
+        for i in range(len(tail)))
+    return new_state
+
+
+def verify_round(params, gate_params, cfg, state, tok, hist, active,
+                 live, n_emitted, max_new, eos_id, spec_k, policy, *,
+                 attn_impl="xla", draft_fn=None):
+    """One draft/verify/commit round over B lanes. Drafts spec_k tokens
+    per live lane, scores C = spec_k + 1 positions in one fused
+    dispatch, accepts the longest greedy-agreeing prefix (clipped at
+    each lane's stop condition) and commits exactly those positions.
+
+    tok [B]: carry token (emitted first, like decode_segment_loop);
+    hist [B, SPEC_HISTORY]: tokens BEFORE tok, -1 padded, recent last;
+    active/live [B]: lane liveness (live = active & in-real-range);
+    draft_fn(hist, tok, k) -> [B, k]: pluggable drafter (defaults to
+    ngram_draft; tests inject adversarial drafters, a small draft model
+    slots in the same way).
+
+    Returns (state, tok, hist, active, n_emitted, fed [B, C],
+    emitted [B, C], ok [B], n_commit [B]) — fed[l, j] is an emitted
+    output token iff emitted[l, j]; ok is False where a lane's logits
+    went non-finite at a COMMITTED position (rejected positions never
+    reach durable state, so only committed ones can poison the lane)."""
+    B = tok.shape[0]
+    C = spec_k + 1
+    drafts = (draft_fn or ngram_draft)(hist, tok, spec_k) \
+        if spec_k > 0 else jnp.zeros((B, 0), jnp.int32)
+    fed = jnp.concatenate([tok[:, None], drafts], axis=1)    # [B,C]
+    logits, sigs = _verify_forward(params, gate_params, cfg, state, fed,
+                                   live, policy, attn_impl=attn_impl)
+    y = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # [B,C]
+    # longest agreeing prefix: position j's feed is trusted iff every
+    # draft before it matched the model's own greedy token
+    if spec_k > 0:
+        acc = jnp.cumprod((drafts == y[:, :-1]).astype(jnp.int32),
+                          axis=1)
+        n_cand = 1 + jnp.sum(acc, axis=1)                    # [B] 1..C
+    else:
+        n_cand = jnp.ones((B,), jnp.int32)
+    # per-lane stop conditions INSIDE the accepted candidates: emitting
+    # eos or the max_new-th token ends the request at that position
+    s_idx = jnp.arange(C, dtype=jnp.int32)
+    stop = ((((eos_id[:, None] >= 0) & (fed == eos_id[:, None])) |
+             (n_emitted[:, None] + s_idx[None] + 1 >= max_new[:, None]))
+            & (s_idx[None] < n_cand[:, None]))
+    first_stop = jnp.min(jnp.where(stop, s_idx[None], C), axis=1)
+    n_commit = jnp.where(live,
+                         jnp.minimum(n_cand, first_stop + 1), 0)
+    done = live & (first_stop < C)
+    # health over committed positions only (position 0 is ALWAYS
+    # committed for a live lane, so a poisoned cache cannot hide)
+    finite = jnp.all(jnp.isfinite(logits), axis=-1)          # [B,C]
+    ok = jnp.all((s_idx[None] >= n_commit[:, None]) | finite, axis=1)
+    emitted = live[:, None] & (s_idx[None] < n_commit[:, None])
+    state = _verify_commit(cfg, state, sigs, n_commit, live, policy)
+    # carry = the model's own prediction after the last committed token
+    carry = jnp.take_along_axis(
+        y, jnp.maximum(n_commit - 1, 0)[:, None], axis=1)[:, 0]
+    new_tok = jnp.where(live, carry, tok)
+    # history absorbs the committed tokens (still excluding the carry)
+    ext = jnp.concatenate([hist, fed], axis=1)               # [B,H+C]
+    H = hist.shape[1]
+    shifted = jnp.take_along_axis(
+        ext, jnp.arange(H, dtype=jnp.int32)[None] + n_commit[:, None],
+        axis=1)
+    hist = jnp.where(live[:, None], shifted, hist)
+    n_emitted = n_emitted + n_commit
+    return (state, new_tok, hist, active & ~done, n_emitted, fed,
+            emitted, ok, n_commit)
+
+
+def spec_decode_segment_loop(params, gate_params, cfg, state, tok, keys,
+                             active, n_emitted, max_new, eos_id, hist,
+                             n_rounds, policy, *, spec_k,
+                             attn_impl="xla", n_real=None,
+                             draft_fn=None):
+    """Speculative counterpart of decode_segment_loop: n_rounds verify
+    rounds under ONE lax.scan, each advancing every live lane by 1 to
+    spec_k + 1 tokens. Greedy-only (keys ride through untouched for
+    snapshot/layout parity). n_real masks trailing rounds exactly like
+    decode_segment_loop's step mask, so the scheduler's pow2 drain
+    buckets work unchanged in ROUND units.
+
+    Returns (state, tok, keys, active, n_emitted,
+    ids [B, n_rounds*(spec_k+1)], emitted [same], ok [B], hist,
+    acc_tok [B] committed tokens, acc_rounds [B] live rounds) — ids
+    columns are round-major/position-minor, so masked-select by
+    `emitted` yields each lane's tokens in emission order, exactly like
+    the non-speculative segment's ids."""
+    if n_real is None:
+        n_real = n_rounds
+
+    def body(carry, j):
+        state, tok, hist, active, n_emitted, ok, a_tok, a_rnd = carry
+        live = active & (j < n_real)
+        state, tok, hist, active, n_emitted, fed, emitted, r_ok, nc = \
+            verify_round(params, gate_params, cfg, state, tok, hist,
+                         active, live, n_emitted, max_new, eos_id,
+                         spec_k, policy, attn_impl=attn_impl,
+                         draft_fn=draft_fn)
+        ok = ok & (~live | r_ok)
+        a_tok = a_tok + nc
+        a_rnd = a_rnd + live.astype(jnp.int32)
+        return (state, tok, hist, active, n_emitted, ok, a_tok, a_rnd), \
+            (fed, emitted)
+
+    B = tok.shape[0]
+    zeros = jnp.zeros((B,), jnp.int32)
+    (state, tok, hist, active, n_emitted, ok, a_tok, a_rnd), \
+        (feds, emits) = jax.lax.scan(
+            body,
+            (state, tok, hist, active, n_emitted,
+             jnp.ones((B,), bool), zeros, zeros),
+            jnp.arange(n_rounds))
+    C = spec_k + 1
+    ids = jnp.moveaxis(feds, 0, 1).reshape(B, n_rounds * C)
+    emitted = jnp.moveaxis(emits, 0, 1).reshape(B, n_rounds * C)
+    return (state, tok, keys, active, n_emitted, ids, emitted, ok, hist,
+            a_tok, a_rnd)
+
+
+def spec_mixed_step_loop(params, gate_params, cfg, state, tok, keys,
+                         active, n_emitted, max_new, eos_id, hist,
+                         chunks, chunk_valid, finish, new_keys, policy,
+                         serve_cfg, *, spec_k, attn_impl="xla",
+                         mem_inputs=None, mem_install=None,
+                         draft_fn=None):
+    """Speculative counterpart of mixed_step_loop: per scan step the
+    decode lanes run one verify_round (1..spec_k+1 tokens each) while
+    admitting lanes consume one prefill chunk; a lane finishing its
+    prompt takes its greedy first token as carry and seeds its drafter
+    history EMPTY-handed — hist rows are seeded host-side at admission
+    with the prompt tail, and the first carry token is exactly the
+    prefill argmax, so no in-scan history write is needed at the
+    transition. Greedy-only. Returns the spec_decode_segment_loop tuple
+    (ids/emitted are [B, n_steps*(spec_k+1)])."""
+    if mem_inputs is not None:
+        memory, mem_len = _memory_from_inputs(params, cfg, mem_inputs)
+        state = install_memory(params, cfg, state, memory, mem_len,
+                               lanes_mask=mem_install)
+
+    def body(carry, xs):
+        state, tok, keys, hist, active, n_emitted, ok, a_tok, \
+            a_rnd = carry
+        ctoks, nv, fin = xs
+        state, tok, hist, dec_active, n_emitted, fed, emitted, r_ok, \
+            nc = verify_round(params, gate_params, cfg, state, tok,
+                              hist, active, active, n_emitted, max_new,
+                              eos_id, spec_k, policy,
+                              attn_impl=attn_impl, draft_fn=draft_fn)
+        ok = ok & (~active | r_ok)
+        a_tok = a_tok + nc
+        a_rnd = a_rnd + active.astype(jnp.int32)
+        # --- prefill sub-step + transition (mirrors mixed_step_loop)
+        state, h_last = _prefill_chunk_step(params, gate_params, cfg,
+                                            ctoks, state, policy,
+                                            serve_cfg, n_valid=nv)
+
+        def _first_and_health(h):
+            lg = compute_logits(params, cfg, h)
+            return (jnp.argmax(lg, axis=-1).astype(jnp.int32),
+                    jnp.all(jnp.isfinite(lg), axis=-1))
+
+        first, fin_ok = jax.lax.cond(
+            jnp.any(fin), _first_and_health,
+            lambda h: (jnp.zeros((h.shape[0],), jnp.int32),
+                       jnp.ones((h.shape[0],), bool)),
+            h_last)
+        ok = ok & (~fin | fin_ok)
+        tok = jnp.where(fin, first, tok)
+        keys = jnp.where(fin[:, None], new_keys, keys)
+        n_emitted = jnp.where(fin, 0, n_emitted)
+        return (state, tok, keys, hist, dec_active | fin, n_emitted, ok,
+                a_tok, a_rnd), (fed, emitted)
+
+    B = tok.shape[0]
+    zeros = jnp.zeros((B,), jnp.int32)
+    (state, tok, keys, hist, active, n_emitted, ok, a_tok, a_rnd), \
+        (feds, emits) = jax.lax.scan(
+            body,
+            (state, tok, keys, hist, active, n_emitted,
+             jnp.ones((B,), bool), zeros, zeros),
+            (chunks, chunk_valid, finish))
+    n_steps, C = chunks.shape[0], spec_k + 1
+    ids = jnp.moveaxis(feds, 0, 1).reshape(B, n_steps * C)
+    emitted = jnp.moveaxis(emits, 0, 1).reshape(B, n_steps * C)
+    return (state, tok, keys, active, n_emitted, ids, emitted, ok, hist,
+            a_tok, a_rnd)
+
+
 # reset targets per leaf name — defined in blocks.py next to
 # init_block_state (the single place that allocates the leaves): slot
 # metadata is invalidated, recurrences and clocks zero; K/V and

@@ -64,6 +64,15 @@ class Engine:
         if impl not in ("xla", "pallas"):
             raise ValueError(f"unknown attn_impl {impl!r}; "
                              f"expected 'xla' or 'pallas'")
+        if serve_cfg.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got "
+                             f"{serve_cfg.spec_k}")
+        if (serve_cfg.spec_k > 0 and cfg.family == "moe"
+                and cfg.num_experts > 0):
+            raise ValueError(
+                "spec_k > 0 is unsupported for the MoE family: expert "
+                "capacity couples tokens across the verify chunk, so "
+                "chunk-shaped scoring cannot be bit-identical per row")
 
         def _prefill(tokens, state, extra):
             return T.prefill(params, gate_params, cfg, tokens, state,
@@ -270,6 +279,47 @@ class Engine:
             return T.insert_lanes(state, sub,
                                   jnp.asarray(lanes, jnp.int32))
 
+        def _spec_segment(state, tok, keys, active, n_emitted, max_new,
+                          eos, hist, n_rounds, n_real):
+            # speculative decode segment (docs/serving.md §Speculative
+            # decoding): n_rounds draft/verify rounds, each committing
+            # 1..spec_k+1 tokens per live lane in ONE chunk-shaped
+            # dispatch. Same pow2 bucketing contract as _segment, in
+            # ROUND units.
+            return T.spec_decode_segment_loop(
+                params, gates, cfg, state, tok, keys, active, n_emitted,
+                max_new, eos, hist, n_rounds, policy,
+                spec_k=serve.spec_k, attn_impl=impl, n_real=n_real)
+
+        def _spec_mixed_core(state, tok, keys, active, n_emitted,
+                             max_new, eos, hist, chunks, chunk_valid,
+                             finish, new_keys, mem_inputs, mem_install):
+            return T.spec_mixed_step_loop(
+                params, gates, cfg, state, tok, keys, active, n_emitted,
+                max_new, eos, hist, chunks, chunk_valid, finish,
+                new_keys, policy, serve, spec_k=serve.spec_k,
+                attn_impl=impl, mem_inputs=mem_inputs,
+                mem_install=mem_install)
+
+        def _spec_mixed_plain(state, tok, keys, active, n_emitted,
+                              max_new, eos, hist, chunks, chunk_valid,
+                              finish, new_keys):
+            return _spec_mixed_core(state, tok, keys, active, n_emitted,
+                                    max_new, eos, hist, chunks,
+                                    chunk_valid, finish, new_keys,
+                                    None, None)
+
+        if mem_key is None:
+            _spec_mixed = _spec_mixed_plain
+        else:
+            def _spec_mixed(state, tok, keys, active, n_emitted,
+                            max_new, eos, hist, chunks, chunk_valid,
+                            finish, new_keys, mem, mem_len, install):
+                return _spec_mixed_core(
+                    state, tok, keys, active, n_emitted, max_new, eos,
+                    hist, chunks, chunk_valid, finish, new_keys,
+                    {mem_key: mem, "mem_len": mem_len}, install)
+
         def _extract(state, tok, keys, lanes):
             # swap-out / checkpoint: gather the lanes' complete movable
             # state + carried token + RNG chain in ONE dispatch. lanes
@@ -291,6 +341,12 @@ class Engine:
                     keys.at[lanes].set(sub_keys))
 
         mixed_jit = jax.jit(_mixed, donate_argnums=(0,))
+        # speculative closures exist only where speculation is legal:
+        # spec_k > 0 and GREEDY (stochastic verification cannot
+        # reproduce the per-lane key chain bit-identically)
+        spec_on = serve.spec_k > 0 and greedy
+        spec_mixed_jit = (jax.jit(_spec_mixed, donate_argnums=(0,))
+                          if spec_on else None)
         closures = {
             "admit": jax.jit(_admit, donate_argnums=(0,)),
             "segment": jax.jit(_segment, static_argnums=(7,),
@@ -317,6 +373,14 @@ class Engine:
             "prefix_install": (jax.jit(_prefix_install,
                                        donate_argnums=(0,))
                                if mem_key is None else None),
+            "spec_segment": (jax.jit(_spec_segment,
+                                     static_argnums=(8,),
+                                     donate_argnums=(0,))
+                             if spec_on else None),
+            "spec_mixed": spec_mixed_jit,
+            "spec_mixed_nomem": (
+                spec_mixed_jit if (mem_key is None or not spec_on) else
+                jax.jit(_spec_mixed_plain, donate_argnums=(0,))),
         }
         self._lane_closures[greedy] = closures
         return closures

@@ -217,6 +217,12 @@ class RequestState:
     #                                     for mid-prefill victims)
     n_retries: int = 0                  # fault recoveries (quarantine +
     #                                     replay) consumed so far
+    spec_rounds: int = 0                # verify rounds this request was
+    #                                     live in (speculative decode)
+    spec_tokens: int = 0                # tokens committed by those
+    #                                     rounds; spec_tokens /
+    #                                     spec_rounds = mean acceptance
+    #                                     length (>= 1 when live)
     reason: Optional[str] = None        # why REJECTED / FAILED /
     #                                     TIMED_OUT (None otherwise)
     # NOTE: the request's last swap-out/checkpoint/park snapshot lives

@@ -261,6 +261,15 @@ class Scheduler:
         self._admit_prefix_fn = closures["admit_prefix"]
         self._admit_capture_fn = closures["admit_capture"]
         self._prefix_install = closures["prefix_install"]
+        self._spec_segment_fn = closures["spec_segment"]
+        self._spec_mixed = closures["spec_mixed"]
+        self._spec_mixed_nomem = closures["spec_mixed_nomem"]
+        # speculative decoding (PR 9, docs/serving.md §Speculative
+        # decoding): GREEDY-ONLY — the engine builds the spec closures
+        # only for the greedy flag, so under temperature sampling
+        # spec_k silently degrades to 0 (the classic per-token path)
+        self.spec_k = (self.serve.spec_k
+                       if self._spec_segment_fn is not None else 0)
         # prefix KV cache: the trie lives on the ENGINE (shared across
         # schedulers, like the compilation cache); cross-memory families
         # bypass it — a cached slab cannot carry the encoder/vision
@@ -272,6 +281,12 @@ class Scheduler:
         self.state = engine.fresh_state(n_lanes)
         self.tok = jnp.zeros((n_lanes,), jnp.int32)
         self.keys = jnp.zeros((n_lanes, 2), jnp.uint32)
+        # per-lane drafter history (speculative decoding): the tokens
+        # the model consumed BEFORE the lane's carry token (prompt +
+        # emitted), -1 padded left, most recent last — seeded host-side
+        # at admission/resume (_seed_hist), then carried through the
+        # spec segment dispatches
+        self.hist = np.full((n_lanes, T.SPEC_HISTORY), -1, np.int32)
         # host lane bookkeeping (tiny [B] arrays, re-uploaded per call)
         self.active = np.zeros(n_lanes, bool)
         self.n_emitted = np.zeros(n_lanes, np.int32)
@@ -323,6 +338,16 @@ class Scheduler:
         # were split into a mixed part + a pure-decode remainder (each
         # half is its own dispatch and counts in n_segments)
         self.n_segment_splits = 0
+        # speculative-decode counters: verify rounds dispatched
+        # (logical, drain-split aware — when spec is on,
+        # n_verify_rounds == decode_segment * (n_segments -
+        # n_segment_splits) exactly, asserted under churn/faults by
+        # tests/test_speculative.py and tests/test_faults.py) and the
+        # acceptance totals (n_spec_tokens / n_spec_rounds = fleet mean
+        # acceptance length)
+        self.n_verify_rounds = 0
+        self.n_spec_tokens = 0
+        self.n_spec_rounds = 0
         # distinct STATIC scan lengths the pure-decode closure was
         # dispatched with — power-of-two buckets (plus decode_segment
         # itself), so its size is O(log2 decode_segment), asserted in
@@ -505,6 +530,22 @@ class Scheduler:
                            request_meta=rs.request.to_meta(),
                            tokens=rs.tokens, kind=kind)
 
+    def _seed_hist(self, lane: int, rs: RequestState) -> None:
+        """Seed the lane's drafter history: every token the model has
+        consumed before its current carry (prompt + emitted tokens),
+        truncated to the SPEC_HISTORY window, left-padded with -1.
+        Called at every lane entry point (fresh admission — phased and
+        interleaved — and snapshot resume, AFTER the host token stream
+        was rolled back to the snapshot point), so the history is always
+        reconstructable host-side and never needs to ride snapshots."""
+        toks = list(rs.request.prompt) + list(rs.tokens)
+        H = self.hist.shape[1]
+        row = np.full((H,), -1, np.int32)
+        tail = toks[-H:]
+        if tail:
+            row[H - len(tail):] = tail
+        self.hist[lane] = row
+
     def _resume_lanes(
             self,
             batch: List[Tuple[RequestState, LaneSnapshot, int]]) -> None:
@@ -543,6 +584,8 @@ class Scheduler:
             self.n_emitted[lane] = snap.n_emitted
             self.max_new[lane] = rs.request.max_new
             self.eos[lane] = rs.request.eos_id
+            if self.spec_k:
+                self._seed_hist(lane, rs)
 
     def park(self, rid: int) -> RequestState:
         """Swap a RUNNING (decoding) request out on purpose: its lane
@@ -1008,6 +1051,8 @@ class Scheduler:
             self.n_emitted[lane] = 0
             self.max_new[lane] = rs.request.max_new
             self.eos[lane] = rs.request.eos_id
+            if self.spec_k:
+                self._seed_hist(lane, rs)
         return len(resume) + k
 
     def _admit_interleaved(self) -> int:
@@ -1044,6 +1089,11 @@ class Scheduler:
             self.n_emitted[lane] = 0
             self.max_new[lane] = rs.request.max_new
             self.eos[lane] = rs.request.eos_id
+            if self.spec_k:
+                # the first carry is the prefill argmax (set inside the
+                # mixed scan), so the history at activation is exactly
+                # the full prompt tail — no in-scan history write needed
+                self._seed_hist(lane, rs)
         if install:
             # one dispatch seeds every hit lane with its cached slab;
             # the mixed segments then stream only the novel suffixes
@@ -1122,20 +1172,30 @@ class Scheduler:
         re-running the encoder/vision projection."""
         self.eng.dispatch_count += 1
         self.n_segments += 1
+        spec = self.spec_k > 0
         args = (self.state, self.tok, self.keys, jnp.asarray(self.active),
                 jnp.asarray(self.n_emitted), jnp.asarray(self.max_new),
-                jnp.asarray(self.eos), jnp.asarray(chunks),
-                jnp.asarray(nv), jnp.asarray(finish),
-                jnp.asarray(new_keys))
-        mixed_fn = self._mixed_nomem
+                jnp.asarray(self.eos))
+        if spec:
+            args += (jnp.asarray(self.hist),)
+        args += (jnp.asarray(chunks), jnp.asarray(nv),
+                 jnp.asarray(finish), jnp.asarray(new_keys))
+        mixed_fn = self._spec_mixed_nomem if spec else self._mixed_nomem
         if self.mem_key is not None and install.any():
             mem, mem_len = self._pack_memory(
                 {l: self.lane_req[l] for l in range(self.n_lanes)
                  if install[l]})
             args += (mem, mem_len, jnp.asarray(install))
-            mixed_fn = self._mixed
-        (self.state, self.tok, self.keys, active_d, n_emitted_d, ids,
-         emitted, ok) = mixed_fn(*args)
+            mixed_fn = self._spec_mixed if spec else self._mixed
+        if spec:
+            self.n_verify_rounds += int(chunks.shape[0])
+            (self.state, self.tok, self.keys, active_d, n_emitted_d,
+             ids, emitted, ok, hist_d, a_tok, a_rnd) = mixed_fn(*args)
+            self.hist = np.array(hist_d)
+            self._account_spec(np.asarray(a_tok), np.asarray(a_rnd))
+        else:
+            (self.state, self.tok, self.keys, active_d, n_emitted_d,
+             ids, emitted, ok) = mixed_fn(*args)
         for lane, n in scheduled.items():
             pf = self.lane_prefill[lane]
             pf.next_chunk += n
@@ -1161,6 +1221,27 @@ class Scheduler:
         self.decode_bucket_lengths.add(bucket)
         self.eng.dispatch_count += 1
         self.n_segments += 1
+        if self.spec_k > 0:
+            # speculative segment: `bucket` static VERIFY ROUNDS (same
+            # pow2 contract, round units), n_steps logical; each round
+            # commits 1..spec_k+1 tokens per live lane, so the returned
+            # grids carry n_steps * (spec_k + 1) token columns
+            self.n_verify_rounds += n_steps
+            (self.state, self.tok, self.keys, active_d, n_emitted_d,
+             ids, emitted, ok, hist_d, a_tok, a_rnd) = \
+                self._spec_segment_fn(
+                    self.state, self.tok, self.keys,
+                    jnp.asarray(self.active),
+                    jnp.asarray(self.n_emitted),
+                    jnp.asarray(self.max_new), jnp.asarray(self.eos),
+                    jnp.asarray(self.hist), bucket, np.int32(n_steps))
+            self.hist = np.array(hist_d)
+            self._account_spec(np.asarray(a_tok), np.asarray(a_rnd))
+            self.active = np.array(active_d)
+            self.n_emitted = np.array(n_emitted_d)
+            n_cols = n_steps * (self.spec_k + 1)
+            return (np.asarray(ids)[:, :n_cols],
+                    np.asarray(emitted)[:, :n_cols], np.array(ok))
         (self.state, self.tok, self.keys, active_d, n_emitted_d, ids,
          emitted, ok) = self._segment(
             self.state, self.tok, self.keys, jnp.asarray(self.active),
@@ -1172,6 +1253,19 @@ class Scheduler:
         # masked bucket-tail steps emit nothing; slice to logical length
         return (np.asarray(ids)[:, :n_steps],
                 np.asarray(emitted)[:, :n_steps], np.array(ok))
+
+    def _account_spec(self, a_tok: np.ndarray, a_rnd: np.ndarray):
+        """Fold one spec dispatch's per-lane acceptance counters
+        (committed tokens / live rounds) into the scheduler totals and
+        each lane's RequestState — spec_tokens / spec_rounds is the
+        request's mean acceptance length."""
+        self.n_spec_tokens += int(a_tok.sum())
+        self.n_spec_rounds += int(a_rnd.sum())
+        for lane in range(self.n_lanes):
+            rs = self.lane_req[lane]
+            if rs is not None and a_rnd[lane]:
+                rs.spec_rounds += int(a_rnd[lane])
+                rs.spec_tokens += int(a_tok[lane])
 
     def _quarantine(self, bad: List[int]) -> None:
         """Recover lanes whose segment produced non-finite outputs:
@@ -1258,13 +1352,16 @@ class Scheduler:
                 continue                 # bad lanes: emissions suspect
             new_toks = ids[lane][emitted[lane]]
             if new_toks.size and not rs.tokens:
-                # first emission: stamp the within-segment step it
-                # happened at, and interpolate its wall time across the
-                # segment — decode_segment no longer quantizes TTFT up
+                # first emission: stamp the within-segment TOKEN COLUMN
+                # it happened at, and interpolate its wall time across
+                # the segment — decode_segment no longer quantizes TTFT
+                # up. Columns are token units: one per step normally,
+                # spec_k + 1 per verify round under speculation, so the
+                # interpolation denominator is the column count.
                 j0 = int(np.argmax(emitted[lane]))
                 rs.first_emit_step = self._steps_done + j0
                 rs.first_token_sec = t_seg0 + (now - t_seg0) * \
-                    (j0 + 1) / n_steps
+                    (j0 + 1) / ids.shape[1]
             rs.tokens.extend(int(x) for x in new_toks)
             if not self.active[lane] and self.lane_prefill[lane] is None:
                 rs.status, rs.finish_sec, rs.lane = Status.DONE, now, -1
@@ -1273,7 +1370,10 @@ class Scheduler:
                 self._release_prefix(rs.rid)
                 finished.append(rs)
                 retired_lanes.append(lane)
-        self._steps_done += n_steps
+        # the global emission clock advances in TOKEN COLUMNS (== steps
+        # when spec is off), keeping first_emit_step deterministic and
+        # monotone across spec and non-spec segments alike
+        self._steps_done += ids.shape[1]
         if bad:
             self._quarantine(bad)
         if self._pc is not None:
@@ -1347,6 +1447,9 @@ class Scheduler:
             "n_retries": sum(rs.n_retries for rs in self.results.values()),
             "n_snapshot_lost": self.n_snapshot_lost,
             "n_recovered_sessions": self.n_recovered_sessions,
+            "n_verify_rounds": self.n_verify_rounds,
+            "n_spec_rounds": self.n_spec_rounds,
+            "n_spec_tokens": self.n_spec_tokens,
         }
         # snapshot tier counters (serve.store) — hits/spills/corruption
         # detection/IO degradation, prefixed to keep one flat namespace

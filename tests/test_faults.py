@@ -525,7 +525,8 @@ def test_decode_remainders_bucket_to_pow2(tiny):
 # ------------------------------------------------------- liveness oracle
 
 
-def _chaos_run(tiny, seed, *, snapshot_dir=None, store_chaos=False):
+def _chaos_run(tiny, seed, *, snapshot_dir=None, store_chaos=False,
+               spec_k=0):
     """One seeded chaos schedule: corrupt + delay + burst faults over a
     preemptible priority workload with timeouts and a tight queue.
     With store_chaos, silent snapshot bit-flips and armed disk IO
@@ -544,7 +545,7 @@ def _chaos_run(tiny, seed, *, snapshot_dir=None, store_chaos=False):
                        decode_segment=2, budget=16, prefill_chunk=8,
                        sched_policy="priority", max_queue=4,
                        max_retries=1, checkpoint_every=2,
-                       snapshot_dir=snapshot_dir)
+                       snapshot_dir=snapshot_dir, spec_k=spec_k)
     sched = Scheduler(eng, n_lanes=2, injector=inj)
     for r in reqs:
         sched.submit(r)
@@ -641,3 +642,66 @@ def test_liveness_hypothesis_schedules(tiny):
         _assert_liveness(sched, eng, reqs)
 
     check()
+
+
+# ------------------------------------- speculative decoding under faults
+
+
+def test_spec_nan_poison_during_verify_round(tiny):
+    """A NaN landing mid-VERIFY-ROUND (speculation on) trips the same
+    per-lane health flag: the lane is quarantined, its speculated slots
+    vanish with the scrub (no partially-committed draft tokens survive
+    anywhere — replay is from a clean slab), and the replayed request
+    DONEs token-identical to the NON-speculative one-shot oracle. The
+    extended dispatch formula and the verify-round ledger
+    (n_verify_rounds == decode_segment * (n_segments -
+    n_segment_splits)) stay exact through the fault."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=8)
+    req = _requests([9], [8])[0]
+    inj = FaultInjector(seed=0, corrupt_prob=1.0)
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=2, max_retries=2, spec_k=2,
+                       **serve)
+    sched = Scheduler(eng, n_lanes=1, injector=inj)
+    sched.submit(req)
+    sched.step()                        # admit + first clean segment
+    sched.step()                        # poisoned verify, quarantined
+    assert sched.n_quarantined == 1 and inj.n_corrupted == 1
+    inj.corrupt_prob = 0.0              # one-off fault
+    res = sched.run()
+    assert res[0].status is Status.DONE and res[0].n_retries == 1
+    want = _oneshot(cfg, params, gates, req, policy="trimkv", **serve)
+    np.testing.assert_array_equal(res[0].ids, want)
+    assert eng.dispatch_count == (
+        sched.n_prefill_rounds + sched.n_segments + sched.n_resets +
+        sched.n_swaps + sched.n_resumes + sched.n_faults_injected)
+    st = sched.stats()
+    assert st["n_verify_rounds"] == eng.serve.decode_segment * (
+        st["n_segments"] - st["n_segment_splits"])
+    assert st["n_spec_rounds"] > 0      # speculation really ran
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_spec_liveness_under_random_fault_schedule(tiny, seed):
+    """The liveness oracle with speculation on: corrupt + delay + burst
+    chaos over the preemptible priority workload. Every request reaches
+    one terminal status, the dispatch formula AND the verify-round
+    ledger stay exact under quarantines / preemptions / splits, and any
+    DONE user request is still token-identical to its NON-speculative
+    one-shot run — faults never launder a rejected draft token into an
+    output stream."""
+    cfg, params, gates = tiny
+    sched, eng, reqs = _chaos_run(tiny, seed, spec_k=2)
+    _assert_liveness(sched, eng, reqs)
+    st = sched.stats()
+    assert st["n_verify_rounds"] == eng.serve.decode_segment * (
+        st["n_segments"] - st["n_segment_splits"])
+    assert st["n_spec_rounds"] > 0
+    for r in reqs:
+        rs = sched.results[r.rid]
+        if rs.status is Status.DONE:
+            want = _oneshot(cfg, params, gates, r, policy="trimkv",
+                            budget=16, prefill_chunk=8)
+            np.testing.assert_array_equal(rs.ids, want,
+                                          err_msg=f"rid={r.rid}")

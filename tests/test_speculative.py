@@ -1,0 +1,563 @@
+"""Speculative decoding parity suite (PR 9).
+
+Claims under test (docs/serving.md §Speculative decoding):
+  1. TOKEN IDENTITY: with spec_k > 0 every request's stream is
+     token-identical to the non-speculative scheduler AND to one-shot
+     Engine.generate(chunked=True) — across all seven eviction
+     policies x both attention impls x both admission modes (phased
+     and interleaved), spec_k in {1, 2, 4}. Speculation is a pure
+     latency optimisation; it may never move a token.
+  2. ACCEPT-PREFIX PROPERTY: for ARBITRARY draft content (adversarial
+     draft_fn injection), one verify_round commits exactly the longest
+     agreeing prefix and leaves the decode state BIT-IDENTICAL to
+     having decode_step'ped only the accepted tokens — KV slabs, slot
+     metadata, recurrent/conv/SSM tails, per-lane clocks and cross
+     mem_len alike (mamba compares to ulp tolerance: XLA's own
+     scan-vs-eager GEMM reproducibility bounds it, see
+     _check_accept_prefix). Rejected drafts never touch durable
+     state — asserted bit-exactly for EVERY family by the
+     same-program rejected-suffix test.
+  3. ROLLBACK COMPOSES with serving machinery: swap-out preemption and
+     resume mid-generation with speculation on stays token-identical;
+     the prefix cache still captures only chunk-aligned prompt
+     boundaries (slab clock == entry tokens: zero unverified
+     speculated tokens in any cached slab) and warm == cold == one-shot.
+  4. ACCOUNTING: dispatches stay O(segments) — the dispatch formula is
+     unchanged — and the verify-round ledger is exact:
+     n_verify_rounds == decode_segment * (n_segments -
+     n_segment_splits) whenever speculation is on, under churn,
+     drain-splits and preemption. Acceptance counters satisfy
+     spec_tokens == emitted tokens per request (every committed token
+     is emitted exactly once).
+  5. GATING: spec_k < 0 and MoE x spec are refused at engine build;
+     temperature sampling degrades to the classic path (spec_k == 0 at
+     the scheduler, zero verify rounds) rather than sampling from the
+     wrong distribution.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.serve import Request, Scheduler, Status, build_engine
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property still runs via the seeded matrix
+    HAVE_HYPOTHESIS = False
+
+ALL_POLICIES = ["trimkv", "streaming_llm", "h2o", "snapkv", "rkv",
+                "keydiff", "full"]
+C = 8  # prefill chunk used throughout the serving tests
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(
+        get_smoke_config("trimkv-paper-4b"), num_layers=2, d_model=64,
+        d_ff=128, num_heads=4, num_kv_heads=2, vocab_size=64,
+        gate_bias_init=3.0)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    gates = T.init_gate_params(jax.random.PRNGKey(1), cfg)
+    return cfg, params, gates
+
+
+def _requests(lens, max_new, seed0=0, vocab=64):
+    rng = np.random.RandomState(7)
+    return [Request(rid=i,
+                    prompt=rng.randint(0, vocab, size=L).astype(np.int32),
+                    max_new=m, seed=seed0 + i)
+            for i, (L, m) in enumerate(zip(lens, max_new))]
+
+
+def _oneshot(cfg, params, gates, req, *, policy, attn_impl="xla",
+             greedy=True, **serve_kw):
+    """The parity oracle: this request alone, one-shot chunked engine
+    (spec_k never reaches the one-shot path — the oracle is the plain
+    generation speculation must reproduce)."""
+    eng = build_engine(cfg, params, gates, policy=policy,
+                       attn_impl=attn_impl, **serve_kw)
+    return eng.generate(req.prompt[None], req.max_new, chunked=True,
+                        greedy=greedy, seed=req.seed)["ids"][0]
+
+
+def _assert_spec_ledger(sched, eng):
+    """The PR-9 accounting contract: formula unchanged, verify-round
+    ledger exact, acceptance >= 1 token per live round."""
+    st = sched.stats()
+    assert eng.dispatch_count == (
+        sched.n_prefill_rounds + sched.n_segments + sched.n_resets +
+        sched.n_swaps + sched.n_resumes + sched.n_faults_injected +
+        sched.n_prefix_installs + sched.n_prefix_extracts)
+    assert st["n_verify_rounds"] == eng.serve.decode_segment * (
+        st["n_segments"] - st["n_segment_splits"]), st
+    assert st["n_spec_tokens"] >= st["n_spec_rounds"] > 0, st
+
+
+# ------------------------------------------ scheduler == one-shot parity
+
+
+@pytest.mark.parametrize("attn_impl", ["xla", "pallas"])
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_spec_matches_oneshot_all_policies(tiny, policy, attn_impl):
+    """spec_k=2 over 4 ragged requests on 2 lanes, BOTH admission
+    modes: token-identical to one-shot for every policy x impl, with
+    the verify ledger exact — bounded-rollback commit composing with
+    every eviction policy's slot metadata on both kernels."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=C)
+    reqs = _requests([5, 11, 19, 8], [6, 3, 8, 5])
+    eng = build_engine(cfg, params, gates, policy=policy,
+                       attn_impl=attn_impl, decode_segment=4, spec_k=2,
+                       **serve)
+    for interleaved in (False, True):
+        eng.dispatch_count = 0
+        sched = Scheduler(eng, n_lanes=2, interleaved=interleaved)
+        res = sched.run(reqs)
+        for r in reqs:
+            want = _oneshot(cfg, params, gates, r, policy=policy,
+                            attn_impl=attn_impl, **serve)
+            np.testing.assert_array_equal(
+                res[r.rid].ids, want,
+                err_msg=f"interleaved={interleaved} rid={r.rid}")
+            assert res[r.rid].status is Status.DONE
+        _assert_spec_ledger(sched, eng)
+
+
+def test_spec_equals_nonspec_equals_oneshot(tiny):
+    """The explicit three-way identity: speculative scheduler ==
+    non-speculative scheduler == one-shot, token for token — and each
+    request's acceptance counters add up (spec_tokens == its emitted
+    stream length; mean acceptance >= 1)."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=C)
+    reqs = _requests([5, 11, 19, 8, 14], [6, 3, 8, 5, 7])
+    base = build_engine(cfg, params, gates, policy="trimkv",
+                        decode_segment=4, **serve)
+    spec = build_engine(cfg, params, gates, policy="trimkv",
+                        decode_segment=4, spec_k=2, **serve)
+    for interleaved in (False, True):
+        res_base = Scheduler(base, n_lanes=2,
+                             interleaved=interleaved).run(reqs)
+        sched = Scheduler(spec, n_lanes=2, interleaved=interleaved)
+        res_spec = sched.run(reqs)
+        for r in reqs:
+            want = _oneshot(cfg, params, gates, r, policy="trimkv",
+                            **serve)
+            np.testing.assert_array_equal(res_base[r.rid].ids, want)
+            np.testing.assert_array_equal(
+                res_spec[r.rid].ids, want,
+                err_msg=f"interleaved={interleaved} rid={r.rid}")
+            rs = res_spec[r.rid]
+            assert rs.spec_tokens == len(rs.tokens) > 0
+            assert 0 < rs.spec_rounds <= rs.spec_tokens
+
+
+@pytest.mark.parametrize("spec_k", [1, 4])
+@pytest.mark.parametrize("interleaved", [False, True])
+def test_spec_k_variants(tiny, spec_k, interleaved):
+    """Draft depth is a free knob: spec_k in {1, 4} (2 covered by the
+    matrix) keeps token identity and the exact verify ledger."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=C)
+    reqs = _requests([5, 11, 19], [6, 8, 5])
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=4, spec_k=spec_k, **serve)
+    sched = Scheduler(eng, n_lanes=2, interleaved=interleaved)
+    res = sched.run(reqs)
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy="trimkv", **serve)
+        np.testing.assert_array_equal(res[r.rid].ids, want,
+                                      err_msg=f"rid={r.rid}")
+    _assert_spec_ledger(sched, eng)
+
+
+# -------------------------------------- rollback composes with serving
+
+
+@pytest.mark.parametrize("interleaved", [False, True])
+def test_spec_swap_preempt_resume_parity(tiny, interleaved):
+    """A request swap-preempted MID-GENERATION with speculation on —
+    in-flight speculated tokens at the segment boundary — resumes
+    token-identically: the snapshot carries only committed state, and
+    the host-side drafter history is reseeded from the request's own
+    token record at resume."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=C)
+    reqs = _requests([9, 7], [12, 4])
+    reqs = [dataclasses.replace(reqs[0], priority=0),
+            dataclasses.replace(reqs[1], priority=3)]
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=2, sched_policy="priority",
+                       spec_k=2, **serve)
+    sched = Scheduler(eng, n_lanes=1, interleaved=interleaved)
+    sched.submit(reqs[0])
+    for _ in range(4):                  # rid 0 decoding mid-generation
+        sched.step()
+    assert sched.active[0]
+    sched.submit(reqs[1])               # outranks -> swap-preempts rid 0
+    res = sched.run()
+    assert sched.n_swaps >= 1 and sched.n_resumes >= 1
+    assert res[0].n_preempts >= 1
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy="trimkv", **serve)
+        np.testing.assert_array_equal(
+            res[r.rid].ids, want,
+            err_msg=f"interleaved={interleaved} rid={r.rid}")
+        assert res[r.rid].status is Status.DONE
+    _assert_spec_ledger(sched, eng)
+
+
+@pytest.mark.parametrize("interleaved", [False, True])
+def test_spec_prefix_cache_warm_equals_cold(tiny, interleaved):
+    """Prefix cache x speculation: captures happen only at
+    chunk-aligned prompt boundaries and the two-phase commit never
+    persists an unverified token, so every cached slab's clock equals
+    its chunk-aligned token count — and the warm drain is
+    token-identical to the cold drain and to one-shot, with full hits
+    and the spec ledger exact on both drains."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=C)
+    rng = np.random.RandomState(3)
+    pool = rng.randint(0, 64, size=24).astype(np.int32)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [pool,
+                         rng.randint(0, 64, size=t).astype(np.int32)]),
+                    max_new=m, seed=10 + i)
+            for i, (t, m) in enumerate(zip([5, 11, 3, 9], [6, 3, 8, 5]))]
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=4, spec_k=2,
+                       prefix_cache_bytes=1 << 22, prefix_min_tokens=C,
+                       **serve)
+    runs = []
+    for _ in range(2):                  # cold drain, then warm drain
+        eng.dispatch_count = 0
+        sched = Scheduler(eng, n_lanes=2, interleaved=interleaved)
+        res = sched.run(reqs)
+        _assert_spec_ledger(sched, eng)
+        assert sched.stats()["prefix_pinned"] == 0
+        runs.append((res, sched))
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy="trimkv", **serve)
+        for name, (res, _) in zip(("cold", "warm"), runs):
+            np.testing.assert_array_equal(
+                res[r.rid].ids, want, err_msg=f"{name} rid={r.rid}")
+    warm = runs[1][1].stats()
+    assert warm["n_prefix_hits"] == len(reqs)
+    assert warm["n_prefix_misses"] == 0
+    # every entry is chunk-aligned AND its slab clock sits exactly at
+    # the boundary: no speculated (or any other unverified) token ever
+    # reached a captured slab
+    entries = list(eng.prefix_cache._entries.values())
+    assert entries
+    for e in entries:
+        assert e.n_tokens % C == 0
+        t_row = np.asarray(e.state["t"]).reshape(-1)
+        assert int(t_row[0]) == e.n_tokens
+
+
+# ------------------------------------------------------------- gating
+
+
+def test_spec_temperature_degrades_to_classic(tiny):
+    """Sampling lanes can't be greedily verified: a spec_k engine
+    driven with greedy=False falls back to the classic path (scheduler
+    spec_k == 0, zero verify rounds) and still reproduces each
+    request's seeded one-shot stream."""
+    cfg, params, gates = tiny
+    serve = dict(budget=16, prefill_chunk=C, temperature=0.8)
+    reqs = _requests([5, 11, 19], [6, 3, 8], seed0=40)
+    eng = build_engine(cfg, params, gates, policy="trimkv",
+                       decode_segment=4, spec_k=2, **serve)
+    sched = Scheduler(eng, n_lanes=2, greedy=False)
+    res = sched.run(reqs)
+    assert sched.spec_k == 0
+    st = sched.stats()
+    assert st["n_verify_rounds"] == st["n_spec_rounds"] == 0
+    for r in reqs:
+        want = _oneshot(cfg, params, gates, r, policy="trimkv",
+                        greedy=False, **serve)
+        np.testing.assert_array_equal(res[r.rid].ids, want)
+
+
+def test_spec_rejects_moe_and_negative_k():
+    """Expert-capacity routing couples batch rows, so a rejected
+    speculative position could perturb its neighbours' expert
+    assignment — the engine refuses the combination up front; negative
+    spec_k is malformed everywhere."""
+    cfg = get_smoke_config("granite-moe-3b-a800m")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    gates = T.init_gate_params(jax.random.PRNGKey(1), cfg)
+    with pytest.raises(ValueError, match="[Mm]oe|expert"):
+        build_engine(cfg, params, gates, policy="trimkv", budget=16,
+                     prefill_chunk=C, spec_k=1)
+    with pytest.raises(ValueError, match="spec_k"):
+        build_engine(cfg, params, gates, policy="trimkv", budget=16,
+                     prefill_chunk=C, spec_k=-1)
+
+
+# ---------------------------------------- accept-prefix state property
+
+
+PROP_FAMILIES = ["dense", "hybrid", "ssm", "vlm"]
+_PROP_ARCH = {"hybrid": "recurrentgemma-2b", "ssm": "falcon-mamba-7b",
+              "vlm": "llama-3.2-vision-90b"}
+
+
+@pytest.fixture(scope="module", params=PROP_FAMILIES)
+def prop(request, tiny):
+    """Per-family harness for the accept-prefix property: a prefilled
+    3-lane state, the carry token, and jitted verify/decode closures
+    (verify with an INJECTED constant-draft draft_fn, jitted per
+    spec_k)."""
+    family = request.param
+    if family == "dense":
+        cfg, params, gates = tiny
+    else:
+        cfg = get_smoke_config(_PROP_ARCH[family])
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        gates = T.init_gate_params(jax.random.PRNGKey(1), cfg)
+    eng = build_engine(cfg, params, gates, policy="trimkv", budget=16,
+                       prefill_chunk=C)
+    B, L = 3, 12
+    rng = np.random.RandomState(11)
+    prompts = rng.randint(0, cfg.vocab_size, size=(B, L)).astype(np.int32)
+    extra = None
+    if eng.mem_key is not None:
+        S, feat = ((cfg.source_len, cfg.d_model)
+                   if cfg.family == "encdec"
+                   else (cfg.num_image_tokens, cfg.vision_dim))
+        extra = {eng.mem_key:
+                 rng.randn(B, S, feat).astype(np.float32) * 0.1}
+    state0, h_last = eng.prefill(jnp.asarray(prompts),
+                                 extra_inputs=extra, chunked=True)
+    tok0 = jnp.argmax(T.compute_logits(params, cfg, h_last[:, None]),
+                      axis=-1)[:, 0].astype(jnp.int32)
+    pol = eng.policy
+
+    dstep = jax.jit(lambda s, t, act: T.decode_step(
+        params, gates, cfg, s, t, pol, active=act))
+
+    @functools.lru_cache(maxsize=None)
+    def vround(spec_k):
+        def f(state, tok, hist, drafts, n_emitted, max_new, eos):
+            return T.verify_round(
+                params, gates, cfg, state, tok, hist,
+                jnp.ones((B,), bool), jnp.ones((B,), bool), n_emitted,
+                max_new, eos, spec_k, pol,
+                draft_fn=lambda h, t, k: drafts)
+        return jax.jit(f)
+
+    hist0 = np.full((B, T.SPEC_HISTORY), -1, np.int32)
+    hist0[:, -L:] = prompts
+    return dict(cfg=cfg, B=B, family=family, state0=state0, tok0=tok0,
+                hist0=jnp.asarray(hist0), dstep=dstep, vround=vround)
+
+
+def _greedy_chain(p, n):
+    """The model's true greedy continuation: n tokens fed one at a
+    time from the harness state — the reference verify must agree
+    with."""
+    ones = jnp.ones((p["B"],), bool)
+    st, t, out = p["state0"], p["tok0"], []
+    for _ in range(n):
+        st, lg = p["dstep"](st, t, ones)
+        t = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        out.append(t)
+    return jnp.stack(out, axis=1)                            # [B, n]
+
+
+def _check_accept_prefix(p, seed, spec_k):
+    """Random accept/reject pattern -> verify_round's committed state
+    is BIT-IDENTICAL to sequentially decode_step'ping only the
+    accepted prefix (per-lane active masks), and its outputs follow
+    the acceptance math exactly."""
+    B, vocab = p["B"], p["cfg"].vocab_size
+    rng = np.random.RandomState(seed)
+    cont = np.asarray(_greedy_chain(p, spec_k + 1))     # [B, spec_k+1]
+    accept = rng.randint(0, spec_k + 1, size=B)         # per-lane prefix
+    drafts = cont[:, :spec_k].copy()
+    for l in range(B):
+        a = accept[l]
+        if a < spec_k:
+            drafts[l, a] = (drafts[l, a] + 1) % vocab   # first mismatch
+            drafts[l, a + 1:] = rng.randint(0, vocab, spec_k - a - 1)
+    zeros = jnp.zeros((B,), jnp.int32)
+    big = jnp.full((B,), 10_000, jnp.int32)
+    eos = jnp.full((B,), -1, jnp.int32)
+    state1, tok1, hist1, active1, n_em1, fed, emitted, ok, nc = \
+        p["vround"](spec_k)(p["state0"], p["tok0"], p["hist0"],
+                            jnp.asarray(drafts), zeros, big, eos)
+    nc = np.asarray(nc)
+    np.testing.assert_array_equal(nc, accept + 1)
+    assert np.asarray(ok).all() and np.asarray(active1).all()
+    np.testing.assert_array_equal(np.asarray(n_em1), nc)
+    # carry = the model's own next token after the last committed one
+    np.testing.assert_array_equal(
+        np.asarray(tok1), cont[np.arange(B), accept])
+    fed_np = np.asarray(fed)
+    np.testing.assert_array_equal(
+        np.asarray(emitted),
+        np.arange(spec_k + 1)[None] < nc[:, None])
+    # drafter history absorbed exactly the committed tokens
+    ext = np.concatenate([np.asarray(p["hist0"]), fed_np], axis=1)
+    H = T.SPEC_HISTORY
+    want_hist = np.stack([ext[l, nc[l]:nc[l] + H] for l in range(B)])
+    np.testing.assert_array_equal(np.asarray(hist1), want_hist)
+    # the state oracle: replay ONLY the accepted tokens sequentially.
+    # Bit-exact for dense / recurrent / cross state. The mamba family
+    # compares to ulp tolerance instead: XLA does NOT guarantee
+    # cross-program bit-reproducibility for its in_proj GEMM shapes —
+    # lax.scan of the PLAIN decode_step (the pre-existing non-spec
+    # segment loop) already differs from an eagerly re-jitted
+    # decode_step loop by the same ~3.6e-7, so the tolerance measures
+    # the backend, not the spec machinery (the same-program rollback
+    # property below stays bit-exact for every family).
+    st_ref = p["state0"]
+    for j in range(spec_k + 1):
+        mask = jnp.asarray(j < nc)
+        st_ref, _ = p["dstep"](st_ref, jnp.asarray(fed_np[:, j]), mask)
+    ref_leaves = jax.tree_util.tree_leaves_with_path(st_ref)
+    got_leaves = jax.tree_util.tree_leaves_with_path(state1)
+    assert len(ref_leaves) == len(got_leaves)
+    for (path, a), (_, b) in zip(ref_leaves, got_leaves):
+        a, b = np.asarray(a), np.asarray(b)
+        msg = jax.tree_util.keystr(path)
+        if p["family"] == "ssm" and np.issubdtype(a.dtype, np.floating):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6,
+                                       err_msg=msg)
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=msg)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_rejected_suffix_is_never_observable(prop, seed):
+    """The sharpest form of the rollback contract, bit-exact for EVERY
+    family (same compiled program on both sides, so no backend
+    reproducibility caveat applies): two verify rounds whose drafts
+    agree on the accepted prefix but carry arbitrary different garbage
+    after the first mismatch commit BIT-IDENTICAL state, carry, history
+    and counters — rejected positions are never observable."""
+    p = prop
+    spec_k = (seed % 4) + 1
+    B, vocab = p["B"], p["cfg"].vocab_size
+    rng = np.random.RandomState(100 + seed)
+    cont = np.asarray(_greedy_chain(p, spec_k + 1))
+    accept = rng.randint(0, spec_k, size=B)          # < spec_k: a real
+    runs = []                                        # rejected suffix
+    for variant in range(2):
+        drafts = cont[:, :spec_k].copy()
+        for l in range(B):
+            a = accept[l]
+            drafts[l, a] = (drafts[l, a] + 1 + variant) % vocab
+            drafts[l, a + 1:] = rng.randint(0, vocab, spec_k - a - 1)
+        runs.append(p["vround"](spec_k)(
+            p["state0"], p["tok0"], p["hist0"], jnp.asarray(drafts),
+            jnp.zeros((B,), jnp.int32), jnp.full((B,), 10_000, jnp.int32),
+            jnp.full((B,), -1, jnp.int32)))
+    (stA, tokA, histA, actA, nemA, _, _, okA, ncA) = runs[0]
+    (stB, tokB, histB, actB, nemB, _, _, okB, ncB) = runs[1]
+    np.testing.assert_array_equal(np.asarray(ncA), accept + 1)
+    np.testing.assert_array_equal(np.asarray(ncA), np.asarray(ncB))
+    np.testing.assert_array_equal(np.asarray(tokA), np.asarray(tokB))
+    np.testing.assert_array_equal(np.asarray(histA), np.asarray(histB))
+    np.testing.assert_array_equal(np.asarray(nemA), np.asarray(nemB))
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(stA),
+            jax.tree_util.tree_leaves_with_path(stB)):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=jax.tree_util.keystr(path))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_accept_prefix_is_sequential_decode(prop, seed):
+    """Seeded accept/reject patterns across all four state families
+    (dense KV, recurrent conv+RG-LRU tails, Mamba SSM tails, cross
+    memory + mem_len) — always runs, hypothesis or not."""
+    _check_accept_prefix(prop, seed, spec_k=(seed % 4) + 1)
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 10 ** 6), spec_k=st.integers(1, 4))
+    @settings(max_examples=10, deadline=None)
+    def test_accept_prefix_property_hypothesis(prop, seed, spec_k):
+        _check_accept_prefix(prop, seed, spec_k)
+
+
+def test_verify_round_clips_at_stop_conditions(prop):
+    """EOS and max_new stop conditions clip the commit INSIDE the
+    round exactly as the sequential loop would: tokens past the stop
+    are rolled back even when the drafts were all correct."""
+    p, spec_k = prop, 3
+    B = p["B"]
+    cont = np.asarray(_greedy_chain(p, spec_k + 1))
+    drafts = jnp.asarray(cont[:, :spec_k])              # all correct
+    zeros = jnp.zeros((B,), jnp.int32)
+    fed_full = np.concatenate([np.asarray(p["tok0"])[:, None],
+                               np.asarray(drafts)], axis=1)
+
+    def emulate(max_new, eos, n_emitted):
+        """The acceptance math in numpy: n_cand = C (all drafts
+        correct), clipped at the first in-range stop."""
+        Cc = spec_k + 1
+        nc = np.zeros(B, np.int64)
+        for l in range(B):
+            stop = Cc - 1
+            for s in range(Cc):
+                if (eos[l] >= 0 and fed_full[l, s] == eos[l]) or \
+                        (n_emitted[l] + s + 1 >= max_new[l]):
+                    stop = s
+                    break
+            nc[l] = stop + 1
+        return nc
+
+    # max_new two tokens away: commit exactly 2, lane done
+    max_new = np.full(B, 2, np.int64)
+    nc_want = emulate(max_new, np.full(B, -1), np.zeros(B, np.int64))
+    _, _, _, active, n_em, _, _, _, nc = p["vround"](spec_k)(
+        p["state0"], p["tok0"], p["hist0"], drafts, zeros,
+        jnp.asarray(max_new, jnp.int32), jnp.full((B,), -1, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(nc), nc_want)
+    assert not np.asarray(active).any()
+    np.testing.assert_array_equal(np.asarray(n_em), nc_want)
+    # eos = the first continuation token: stop where it lands
+    eos = cont[:, 0].astype(np.int64)
+    nc_want = emulate(np.full(B, 10_000, np.int64), eos,
+                      np.zeros(B, np.int64))
+    _, _, _, active, _, _, _, _, nc = p["vround"](spec_k)(
+        p["state0"], p["tok0"], p["hist0"], drafts, zeros,
+        jnp.full((B,), 10_000, jnp.int32), jnp.asarray(eos, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(nc), nc_want)
+    assert not np.asarray(active).any()
+
+
+# ----------------------------------------------------------- drafter
+
+
+def test_ngram_draft_finds_bigram_continuation():
+    """The self-drafter proposes the continuation of the most recent
+    earlier occurrence of (prev, carry); lanes without a match repeat
+    the carry token; -1 padding never matches."""
+    H = 8
+    hist = np.full((3, H), -1, np.int32)
+    hist[0, -6:] = [7, 3, 9, 2, 5, 7]       # earlier (7, 3) occurrence
+    hist[1, -3:] = [4, 5, 6]                # no (6, 1) bigram
+    hist[2, -4:] = [1, 2, 1, 2]             # cycle: (2, 1) -> 2, 1, ...
+    tok = jnp.asarray([3, 1, 1], jnp.int32)
+    drafts = np.asarray(T.ngram_draft(jnp.asarray(hist), tok, 3))
+    # lane 0: bigram (hist[-1]=7, carry=3) recurs earlier -> propose
+    # its continuation 9, 2, 5
+    np.testing.assert_array_equal(drafts[0], [9, 2, 5])
+    # lane 1: no match -> repeat carry
+    np.testing.assert_array_equal(drafts[1], [1, 1, 1])
+    # lane 2: (2,1) at (-3,-2) continues 2, then runs off the known
+    # history -> carry fallback for the tail
+    np.testing.assert_array_equal(drafts[2], [2, 1, 1])
