@@ -12,7 +12,8 @@ from benchmarks import (fig3_pareto, fig5_interpretability, roofline,
                         table1_longproc, table3_longmem, table5_ablation,
                         table6_throughput, table7_serving, table8_slo,
                         table9_chunked_prefill, table10_faults,
-                        table11_store, table12_prefix, table13_spec)
+                        table11_store, table12_prefix, table13_spec,
+                        table14_shard)
 
 BENCHES = (
     ("fig3_pareto", fig3_pareto.run),
@@ -27,6 +28,7 @@ BENCHES = (
     ("table11_store", table11_store.run),
     ("table12_prefix", table12_prefix.run),
     ("table13_spec", table13_spec.run),
+    ("table14_shard", table14_shard.run),
     ("fig5_interpretability", fig5_interpretability.run),
     ("roofline", roofline.run),
 )

@@ -249,7 +249,12 @@ def cache_topm_merge(cache, k_c, v_c, beta_c, pos_c, aux_c, t,
     all_beta = jnp.concatenate([cache["beta"], beta_c], axis=-1)
     all_pos = jnp.concatenate([cache["pos"], pos_c], axis=-1)
     all_aux = jnp.concatenate([cache["aux"], aux_c], axis=-1)
-    _, idx = jax.lax.top_k(all_scores, M)                   # [B,H,M]
+    # Stable argsort, NOT lax.top_k: identical selection (both break
+    # ties toward the lower index, and jax argsort is always stable) but
+    # XLA's SPMD partitioner cannot partition the TopK custom-call and
+    # all-gathers the lane axis, while sort stays shard-local on the
+    # non-sorted dims (sharded admission; shard_serve --check-hlo).
+    idx = jnp.argsort(-all_scores, axis=-1)[..., :M]        # [B,H,M]
     take = lambda a: jnp.take_along_axis(a, idx, axis=2)
     return {
         "k": jnp.take_along_axis(all_k, idx[..., None], axis=2),

@@ -30,6 +30,27 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_cpu_mesh(data: int, model: int):
+    """REAL (data, model) mesh over virtual host devices — for sharded
+    serving validation on CPU (launch/shard_serve.py, tests). Unlike the
+    abstract device-duplicating test meshes, every position is a
+    distinct addressable device, so programs actually SPMD-partition
+    and execute. Requires the process to have been launched with
+    --xla_force_host_platform_device_count >= data*model set BEFORE jax
+    initialized (the dryrun.py pattern); raises a clear error
+    otherwise instead of silently building a broken mesh."""
+    need = data * model
+    have = len(jax.devices())
+    if have < need:
+        raise RuntimeError(
+            f"make_cpu_mesh({data}, {model}) needs {need} devices but "
+            f"only {have} are visible. Set XLA_FLAGS="
+            f"\"--xla_force_host_platform_device_count={need}\" in the "
+            f"environment (or as the process's first statement) before "
+            f"jax initializes — see launch/shard_serve.py.")
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
 def num_chips(mesh) -> int:
     n = 1
     for s in mesh.shape.values():

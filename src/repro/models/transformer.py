@@ -1189,12 +1189,44 @@ def reset_lanes(state, lane_mask):
     return out
 
 
+def install_lanes(state, sub_state, lane_mask):
+    """Admit requests, SPMD-shard-local: select the masked lanes' rows
+    from a LANE-ALIGNED full-B sub_state (row i of sub_state is lane
+    i's fresh/prefilled/resumed state) into the B-lane state.
+    lane_mask: [B] bool. This is the mask-select twin of insert_lanes:
+    elementwise over the lane axis, so on a lane-sharded mesh every
+    shard writes only its own rows — no scatter, no cross-shard
+    resharding (the same "select, not scatter" rationale as
+    core.cache.cache_insert). The serving closures route ALL lane
+    installs (admission, resume, prefix-slab seeding) through here;
+    insert_lanes stays as the index-addressed oracle utility."""
+    def sel(axis):
+        def f(o, n):
+            shape = [1] * o.ndim
+            shape[axis] = lane_mask.shape[0]
+            return jnp.where(lane_mask.reshape(shape), n, o)
+        return f
+
+    out = {"t": jnp.where(lane_mask, sub_state["t"], state["t"])}
+    if state["layers"] is not None:
+        out["layers"] = jax.tree.map(sel(1), state["layers"],
+                                     sub_state["layers"])
+    else:
+        out["layers"] = None
+    out["tail"] = jax.tree.map(sel(0), state["tail"], sub_state["tail"])
+    return out
+
+
 def insert_lanes(state, sub_state, lanes):
     """Admit requests: scatter a freshly prefilled sub_state (batch k,
     e.g. from a ragged prefill_chunk_loop over the admitted prompts)
     into lanes `lanes` ([k] int32) of the B-lane state. Every leaf of
     the target lanes is overwritten (cache K/V included), so insert
-    after reset_lanes is a complete lane lifecycle."""
+    after reset_lanes is a complete lane lifecycle. Index-addressed —
+    the serving hot path uses the mask-select install_lanes instead
+    (shard-local on a lane-sharded mesh); this stays as the oracle
+    utility (tests/test_faults.py round-trips through it) and the
+    host-side prefix-trie path."""
     lanes = jnp.asarray(lanes, jnp.int32)
     out = {"t": state["t"].at[lanes].set(sub_state["t"])}
     if state["layers"] is not None:

@@ -45,16 +45,34 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ServeConfig
 from repro.core.policies import make_policy
 from repro.models import transformer as T
 from repro.serve.prefix_cache import PrefixCache
+from repro.sharding import rules as shard_rules
 
 
 class Engine:
-    def __init__(self, cfg, params, gate_params, serve_cfg: ServeConfig):
+    def __init__(self, cfg, params, gate_params, serve_cfg: ServeConfig,
+                 mesh=None):
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            # SPMD serving (docs/serving.md §Sharded serving): weights
+            # are placed ONCE — tensor-parallel over "model" where the
+            # head/FFN counts divide, replicated over the data axes
+            # (fsdp=False: decode must not all-gather weights every
+            # step). Every closure below captures the committed arrays,
+            # so the partitioner sees their layout without per-call
+            # traffic.
+            q_tp, kv_tp = shard_rules.attn_tp_flags(cfg, mesh)
+            params = jax.device_put(
+                params, shard_rules.param_shardings(
+                    mesh, params, fsdp=False, q_tp=q_tp, kv_tp=kv_tp))
+            gate_params = jax.device_put(
+                gate_params, shard_rules.replicated(mesh, gate_params))
         self.params = params
         self.gates = gate_params
         self.serve = serve_cfg
@@ -144,28 +162,46 @@ class Engine:
             return cfg.source_len, cfg.d_model
         return None
 
-    def lane_closures(self, greedy: bool):
+    def lane_closures(self, greedy: bool, n_lanes: Optional[int] = None):
         """Jitted continuous-batching closures (serve.scheduler), built
         lazily and CACHED PER ENGINE so every Scheduler constructed on
         this engine shares one set of compilations: ragged admission
-        prefill(+first token), lane scatter, masked decode segment, lane
-        reset. Keyed by the greedy flag (the segment closure bakes the
-        sampling mode in). For cross-memory families (vlm/encdec) the
+        prefill(+first token), masked lane install, masked decode
+        segment, lane reset. Keyed by (greedy, n_lanes): the segment
+        closure bakes the sampling mode in, and under a mesh the lane
+        count pins the sharding tables stamped on every closure (a
+        single-device engine ignores n_lanes — shapes specialize per
+        call as always). For cross-memory families (vlm/encdec) the
         admit/mixed closures take extra operands: the padded per-lane
-        memory slab [B, S, feat] and its valid lengths mem_len [B]."""
+        memory slab [B, S, feat] and its valid lengths mem_len [B].
+
+        Every per-lane operand is LANE-ALIGNED (row i belongs to lane
+        i) and installs are [B]-bool-mask where-selects, so with a mesh
+        the lane axis shards over the data axes with NO cross-shard
+        scatter or gather anywhere in the serving hot loop
+        (docs/serving.md §Sharded serving)."""
         greedy = bool(greedy)
-        if greedy in self._lane_closures:
-            return self._lane_closures[greedy]
+        if self.mesh is not None and n_lanes is None:
+            raise ValueError(
+                "a mesh-sharded Engine needs the lane count to build "
+                "its sharding tables: call lane_closures(greedy, "
+                "n_lanes)")
+        cache_key = (greedy, n_lanes if self.mesh is not None else None)
+        if cache_key in self._lane_closures:
+            return self._lane_closures[cache_key]
         params, gates, cfg = self.params, self.gates, self.cfg
         serve, policy, impl = self.serve, self.policy, self.serve.attn_impl
         mem_key = self.mem_key
 
         def _admit_core(state, tok, keys, chunks, n_valid, new_keys,
-                        lanes, extra):
+                        lane_mask, extra):
             # the WHOLE admission is one program: fresh sub-state +
             # (cross-memory install +) ragged prefill + first tokens +
-            # lane scatter — one dispatch per admission round however
-            # many requests and chunks it packs
+            # masked lane install — one dispatch per admission round
+            # however many requests and chunks it packs. The grid is
+            # lane-aligned (free lanes ride as all-zero-valid frozen
+            # rows), so the install is a where-select that stays
+            # shard-local on the lane axis
             k = chunks.shape[1]
             sub = T.init_decode_state(cfg, k, serve.budget)
             sub, h_last = T.prefill_chunk_loop(
@@ -173,9 +209,9 @@ class Engine:
                 extra_inputs=extra)
             logits = T.compute_logits(params, cfg, h_last)
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            state = T.insert_lanes(state, sub, lanes)
-            return (state, tok.at[lanes].set(first),
-                    keys.at[lanes].set(new_keys))
+            state = T.install_lanes(state, sub, lane_mask)
+            return (state, jnp.where(lane_mask, first, tok),
+                    jnp.where(lane_mask[:, None], new_keys, keys))
 
         def _segment(state, tok, keys, active, n_emitted, max_new, eos,
                      n_steps, n_real):
@@ -219,16 +255,16 @@ class Engine:
 
         if mem_key is None:
             def _admit(state, tok, keys, chunks, n_valid, new_keys,
-                       lanes):
+                       lane_mask):
                 return _admit_core(state, tok, keys, chunks, n_valid,
-                                   new_keys, lanes, None)
+                                   new_keys, lane_mask, None)
 
             _mixed = _mixed_plain
         else:
             def _admit(state, tok, keys, chunks, n_valid, new_keys,
-                       lanes, mem, mem_len):
+                       lane_mask, mem, mem_len):
                 return _admit_core(state, tok, keys, chunks, n_valid,
-                                   new_keys, lanes,
+                                   new_keys, lane_mask,
                                    {mem_key: mem, "mem_len": mem_len})
 
             def _mixed(state, tok, keys, active, n_emitted, max_new,
@@ -241,14 +277,14 @@ class Engine:
                                    install)
 
         def _admit_prefix(state, tok, keys, chunks, n_valid, new_keys,
-                          lanes, sub0, capture_chunk):
+                          lane_mask, sub0, capture_chunk):
             # prefix-cache admission (docs/serving.md §Prefix cache):
             # sub0 carries the lanes' INITIAL sub-state — cached slabs
-            # scattered at hit rows (their per-lane t already at the
+            # at hit lanes' rows (their per-lane t already at the
             # prefix boundary, so chunk positions continue from it),
             # fresh rows elsewhere — and the grid holds only each
-            # request's NOVEL SUFFIX chunks. capture_chunk[i] = j > 0
-            # snapshots lane i's state right after its j-th suffix
+            # request's NOVEL SUFFIX chunks. capture_chunk[lane] = j>0
+            # snapshots that lane's state right after its j-th suffix
             # chunk (its capture boundary) via the scan's snap carry;
             # the host inserts those rows into the trie. Still ONE
             # dispatch per admission round: hits and captures ride the
@@ -258,26 +294,26 @@ class Engine:
                 capture_chunk=capture_chunk)
             logits = T.compute_logits(params, cfg, h_last)
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            state = T.insert_lanes(state, sub, lanes)
-            return (state, tok.at[lanes].set(first),
-                    keys.at[lanes].set(new_keys), snap)
+            state = T.install_lanes(state, sub, lane_mask)
+            return (state, jnp.where(lane_mask, first, tok),
+                    jnp.where(lane_mask[:, None], new_keys, keys), snap)
 
         def _admit_capture(state, tok, keys, chunks, n_valid, new_keys,
-                           lanes, capture_chunk):
+                           lane_mask, capture_chunk):
             # capture-only variant (no hits this round): fresh
             # sub-state built on device, so the host skips shipping a
             # [n_lanes]-row sub0 it would only fill with zeros
             sub0 = T.init_decode_state(cfg, chunks.shape[1], serve.budget)
             return _admit_prefix(state, tok, keys, chunks, n_valid,
-                                 new_keys, lanes, sub0, capture_chunk)
+                                 new_keys, lane_mask, sub0, capture_chunk)
 
-        def _prefix_install(state, sub, lanes):
-            # interleaved-mode prefix hit: scatter the cached slabs
-            # into their lanes BEFORE the mixed segment streams the
-            # suffix chunks. tok/keys need no install here — the mixed
-            # scan writes both at the lane's finish transition.
-            return T.insert_lanes(state, sub,
-                                  jnp.asarray(lanes, jnp.int32))
+        def _prefix_install(state, sub, lane_mask):
+            # interleaved-mode prefix hit: where-select the cached
+            # slabs (lane-aligned rows) into their lanes BEFORE the
+            # mixed segment streams the suffix chunks. tok/keys need no
+            # install here — the mixed scan writes both at the lane's
+            # finish transition.
+            return T.install_lanes(state, sub, lane_mask)
 
         def _spec_segment(state, tok, keys, active, n_emitted, max_new,
                           eos, hist, n_rounds, n_real):
@@ -320,69 +356,134 @@ class Engine:
                     hist, chunks, chunk_valid, finish, new_keys,
                     {mem_key: mem, "mem_len": mem_len}, install)
 
-        def _extract(state, tok, keys, lanes):
-            # swap-out / checkpoint: gather the lanes' complete movable
-            # state + carried token + RNG chain in ONE dispatch. lanes
-            # is always padded to n_lanes entries (extras repeat a real
-            # lane; the host keeps only the first k rows) so the
-            # closure compiles once, not once per victim count. state
+        def _extract(state, tok, keys):
+            # swap-out / checkpoint: ONE dispatch commits the complete
+            # movable state + carried tokens + RNG chains; the host
+            # slices out the victim lanes' rows (scheduler._snap_row).
+            # Identity on purpose: the old per-victim index gather
+            # compiled a cross-lane gather an SPMD partitioner must
+            # lower as a cross-shard collective — full-B extract keeps
+            # the program shard-local and moves the same bytes (the
+            # gather operand was already padded to n_lanes rows). state
             # is NOT donated: the source lanes live on.
-            lanes = jnp.asarray(lanes, jnp.int32)
-            return T.extract_lanes(state, lanes), tok[lanes], keys[lanes]
+            return state, tok, keys
 
-        def _resume(state, tok, keys, sub, sub_tok, sub_keys, lanes):
-            # swap-in: scatter host LaneSnapshots (stacked + padded to
-            # n_lanes rows; pad rows carry lane index n_lanes = OUT OF
-            # BOUNDS, which jax scatter drops) back into their new
-            # lanes — bit-identical to never having left the device
-            lanes = jnp.asarray(lanes, jnp.int32)
-            state = T.insert_lanes(state, sub, lanes)
-            return (state, tok.at[lanes].set(sub_tok),
-                    keys.at[lanes].set(sub_keys))
+        def _resume(state, tok, keys, sub, sub_tok, sub_keys, lane_mask):
+            # swap-in: host LaneSnapshots arrive LANE-ALIGNED (row lane
+            # of sub is that lane's snapshot; other rows carry filler
+            # the mask drops) — a where-select install, bit-identical
+            # to never having left the device, shard-local under a mesh
+            state = T.install_lanes(state, sub, lane_mask)
+            return (state, jnp.where(lane_mask, sub_tok, tok),
+                    jnp.where(lane_mask[:, None], sub_keys, keys))
 
-        mixed_jit = jax.jit(_mixed, donate_argnums=(0,))
+        # ---- sharding tables (mesh-native serving, docs/serving.md
+        # §Sharded serving): with a mesh, EVERY closure is stamped with
+        # explicit in_shardings/out_shardings — decode state by the
+        # state_spec rules (lane axis over the data axes, heads/slots
+        # over "model"), per-lane operands by lane_operand_spec (lane
+        # axis only; broadcast to every "model" shard), scalars
+        # replicated. Donation is preserved: donated state in/out carry
+        # the identical sharding tree, so buffers are reused in place.
+        sh = {}
+        if self.mesh is not None:
+            mesh = self.mesh
+            st = shard_rules.state_shardings(mesh, jax.eval_shape(
+                lambda: T.init_decode_state(cfg, n_lanes, serve.budget)))
+
+            def lane(nd, axis=0):
+                shape = tuple(n_lanes if i == axis else 1
+                              for i in range(nd))
+                return shard_rules.lane_operand_sharding(mesh, shape,
+                                                         axis)
+
+            l1, l2, l3 = lane(1), lane(2), lane(3)
+            g2, g3 = lane(2, axis=1), lane(3, axis=1)
+            rep = NamedSharding(mesh, P())
+            tl = (st, l1, l2)                       # (state, tok, keys)
+            seg_out = tl + (l1, l1, l2, l2, l1)
+            spec_out = seg_out + (l2, l1, l1)
+            mem_tail = (l3, l1) if mem_key is not None else ()
+            mixed_tail = (l3, l1, l1) if mem_key is not None else ()
+            mixed_in = tl + (l1, l1, l1, l1, g3, g2, g2, l2)
+            spec_mixed_in = tl + (l1, l1, l1, l1, l2, g3, g2, g2, l2)
+            sh = {
+                "admit": (tl + (g3, g2, l2, l1) + mem_tail, tl),
+                # static n_steps/n_rounds excluded: in_shardings cover
+                # the DYNAMIC args only
+                "segment": (tl + (l1, l1, l1, l1, rep), seg_out),
+                "mixed": (mixed_in + mixed_tail, seg_out),
+                "mixed_nomem": (mixed_in, seg_out),
+                "reset": ((st, l1), st),
+                "extract": (tl, tl),
+                "resume": (tl + (st, l1, l2, l1), tl),
+                "scrub": ((st, l1), st),
+                "admit_prefix": (tl + (g3, g2, l2, l1, st, l1),
+                                 tl + (st,)),
+                "admit_capture": (tl + (g3, g2, l2, l1, l1),
+                                  tl + (st,)),
+                "prefix_install": ((st, st, l1), st),
+                "spec_segment": (tl + (l1, l1, l1, l1, l2, rep),
+                                 spec_out),
+                "spec_mixed": (spec_mixed_in + mixed_tail, spec_out),
+                "spec_mixed_nomem": (spec_mixed_in, spec_out),
+            }
+
+        def _jit(name, fn, donate=(), static=()):
+            kw = {}
+            if static:
+                kw["static_argnums"] = static
+            if donate:
+                kw["donate_argnums"] = donate
+            if name in sh:
+                kw["in_shardings"], kw["out_shardings"] = sh[name]
+            return jax.jit(fn, **kw)
+
+        mixed_jit = _jit("mixed", _mixed, donate=(0,))
         # speculative closures exist only where speculation is legal:
         # spec_k > 0 and GREEDY (stochastic verification cannot
         # reproduce the per-lane key chain bit-identically)
         spec_on = serve.spec_k > 0 and greedy
-        spec_mixed_jit = (jax.jit(_spec_mixed, donate_argnums=(0,))
+        spec_mixed_jit = (_jit("spec_mixed", _spec_mixed, donate=(0,))
                           if spec_on else None)
         closures = {
-            "admit": jax.jit(_admit, donate_argnums=(0,)),
-            "segment": jax.jit(_segment, static_argnums=(7,),
-                               donate_argnums=(0,)),
+            "admit": _jit("admit", _admit, donate=(0,)),
+            "segment": _jit("segment", _segment, static=(7,),
+                            donate=(0,)),
             "mixed": mixed_jit,
             # same jit object for non-cross families: _mixed IS the
             # plain closure there, so no second compilation cache
             "mixed_nomem": (mixed_jit if mem_key is None else
-                            jax.jit(_mixed_plain, donate_argnums=(0,))),
-            "reset": jax.jit(T.reset_lanes, donate_argnums=(0,)),
-            "extract": jax.jit(_extract),
-            "resume": jax.jit(_resume, donate_argnums=(0,)),
+                            _jit("mixed_nomem", _mixed_plain,
+                                 donate=(0,))),
+            "reset": _jit("reset", T.reset_lanes, donate=(0,)),
+            "extract": _jit("extract", _extract),
+            "resume": _jit("resume", _resume, donate=(0,)),
             # quarantine: reset + zero the poisoned lanes' K/V payload
-            "scrub": jax.jit(T.scrub_lanes, donate_argnums=(0,)),
+            "scrub": _jit("scrub", T.scrub_lanes, donate=(0,)),
             # prefix-cache closures — self-attention families only; the
             # scheduler bypasses the cache for cross-memory families
             # (a cached slab would not carry the encoder/vision memory
             # its suffix chunks cross-attend into)
-            "admit_prefix": (jax.jit(_admit_prefix, donate_argnums=(0,))
+            "admit_prefix": (_jit("admit_prefix", _admit_prefix,
+                                  donate=(0,))
                              if mem_key is None else None),
-            "admit_capture": (jax.jit(_admit_capture,
-                                      donate_argnums=(0,))
+            "admit_capture": (_jit("admit_capture", _admit_capture,
+                                   donate=(0,))
                               if mem_key is None else None),
-            "prefix_install": (jax.jit(_prefix_install,
-                                       donate_argnums=(0,))
+            "prefix_install": (_jit("prefix_install", _prefix_install,
+                                    donate=(0,))
                                if mem_key is None else None),
-            "spec_segment": (jax.jit(_spec_segment,
-                                     static_argnums=(8,),
-                                     donate_argnums=(0,))
+            "spec_segment": (_jit("spec_segment", _spec_segment,
+                                  static=(8,), donate=(0,))
                              if spec_on else None),
             "spec_mixed": spec_mixed_jit,
             "spec_mixed_nomem": (
                 spec_mixed_jit if (mem_key is None or not spec_on) else
-                jax.jit(_spec_mixed_plain, donate_argnums=(0,))),
+                _jit("spec_mixed_nomem", _spec_mixed_plain,
+                     donate=(0,))),
         }
-        self._lane_closures[greedy] = closures
+        self._lane_closures[cache_key] = closures
         return closures
 
     def _first_token(self, h_last):
@@ -393,7 +494,14 @@ class Engine:
     # ------------------------------------------------------------ state
 
     def fresh_state(self, batch: int):
-        return T.init_decode_state(self.cfg, batch, self.serve.budget)
+        state = T.init_decode_state(self.cfg, batch, self.serve.budget)
+        if self.mesh is not None:
+            # commit the lane state to its mesh layout up front so the
+            # first donated closure call starts from the same placement
+            # it will produce
+            state = jax.device_put(
+                state, shard_rules.state_shardings(self.mesh, state))
+        return state
 
     def fresh_lane_row(self):
         """Host-side single-lane fresh decode-state row (cached after
@@ -520,5 +628,7 @@ class Engine:
         return correct / max(counted, 1)
 
 
-def build_engine(cfg, params, gate_params, **serve_kwargs) -> Engine:
-    return Engine(cfg, params, gate_params, ServeConfig(**serve_kwargs))
+def build_engine(cfg, params, gate_params, mesh=None,
+                 **serve_kwargs) -> Engine:
+    return Engine(cfg, params, gate_params, ServeConfig(**serve_kwargs),
+                  mesh=mesh)

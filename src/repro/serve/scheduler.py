@@ -171,8 +171,8 @@ def _snap_row(sub, i: int) -> dict:
 
 def _stack_rows(rows: List[dict], n: int) -> dict:
     """Stack k single-lane snapshot states into an n-row sub-state
-    (pad rows repeat row 0; they scatter to an out-of-bounds lane
-    index, which jax drops — see Engine's resume closure)."""
+    (pad rows repeat row 0; the install mask drops them, so their
+    bytes never land — see Engine's resume closure)."""
     rows = rows + [rows[0]] * (n - len(rows))
     sub = {"t": np.concatenate([r["t"] for r in rows])}
     if rows[0]["layers"] is not None:
@@ -184,6 +184,17 @@ def _stack_rows(rows: List[dict], n: int) -> dict:
     sub["tail"] = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
                                *[r["tail"] for r in rows])
     return sub
+
+
+def _stack_lane_rows(rows: Dict[int, dict], n: int) -> dict:
+    """Stack single-lane snapshot states LANE-ALIGNED into an n-row
+    sub-state: row `lane` holds rows[lane]; lanes without an entry
+    repeat an arbitrary real row as filler (the [B]-mask where-select
+    install drops them — lane-aligned rows + mask install is what keeps
+    admission/resume shard-local under a mesh; see Engine's
+    lane_closures)."""
+    filler = next(iter(rows.values()))
+    return _stack_rows([rows.get(l, filler) for l in range(n)], n)
 
 
 @dataclasses.dataclass
@@ -249,7 +260,7 @@ class Scheduler:
         # jitted closures live on the Engine (cached per greedy flag) so
         # successive schedulers — e.g. benchmark warm-up then measured
         # run — share one set of compilations
-        closures = engine.lane_closures(self.greedy)
+        closures = engine.lane_closures(self.greedy, n_lanes)
         self._admit_fn = closures["admit"]
         self._segment = closures["segment"]
         self._mixed = closures["mixed"]
@@ -510,20 +521,19 @@ class Scheduler:
         write through to the disk tier). O(M) per lane by construction
         — eviction already compressed each lane to its budget — which
         is what makes preemption-by-swap, parking and checkpointing
-        affordable. The lane index operand is padded to n_lanes (extras
-        repeat a real lane; only the first k rows are kept) so the
-        closure compiles once."""
-        idx = np.full(self.n_lanes, lanes[0], np.int32)
-        idx[: len(lanes)] = lanes
+        affordable. The extract closure commits the FULL lane state
+        (identity program — shard-local under a mesh, and the same
+        bytes the old padded index-gather moved) and the host slices
+        out the victim lanes' rows."""
         self.eng.dispatch_count += 1
         self.n_swaps += 1
         sub, toks, keys = jax.device_get(
-            self._extract(self.state, self.tok, self.keys,
-                          jnp.asarray(idx)))
-        for i, lane in enumerate(lanes):
+            self._extract(self.state, self.tok, self.keys))
+        for lane in lanes:
             rs = self.lane_req[lane]
             snap = LaneSnapshot(
-                state=_snap_row(sub, i), tok=toks[i], key=keys[i],
+                state=_snap_row(sub, lane), tok=toks[lane],
+                key=keys[lane],
                 n_emitted=int(self.n_emitted[lane]),
                 n_tokens=len(rs.tokens))
             self.store.put(rs.rid, snap,
@@ -556,22 +566,24 @@ class Scheduler:
         token stream (parity oracle in tests/test_faults.py). Host-side
         stream/bookkeeping is rolled back to the snapshot point
         (tokens truncated to snapshot.n_tokens — a no-op on a plain
-        swap-out, a real rollback on fault replay)."""
-        rows = [snap.state for _, snap, _ in batch]
-        sub = _stack_rows(rows, self.n_lanes)
+        swap-out, a real rollback on fault replay). Snapshot rows are
+        stacked LANE-ALIGNED and installed by a [B] mask, so the resume
+        program stays shard-local under a mesh."""
+        rows = {lane: snap.state for _, snap, lane in batch}
+        sub = _stack_lane_rows(rows, self.n_lanes)
         sub_tok = np.zeros((self.n_lanes,), np.int32)
         sub_keys = np.zeros((self.n_lanes, 2), np.uint32)
-        lane_idx = np.full(self.n_lanes, self.n_lanes, np.int32)
-        for i, (rs, snap, lane) in enumerate(batch):
-            sub_tok[i] = snap.tok
-            sub_keys[i] = snap.key
-            lane_idx[i] = lane
+        mask = np.zeros(self.n_lanes, bool)
+        for rs, snap, lane in batch:
+            sub_tok[lane] = snap.tok
+            sub_keys[lane] = snap.key
+            mask[lane] = True
         self.eng.dispatch_count += 1
         self.n_resumes += 1
         self.state, self.tok, self.keys = self._resume(
             self.state, self.tok, self.keys,
             jax.tree.map(jnp.asarray, sub), jnp.asarray(sub_tok),
-            jnp.asarray(sub_keys), jnp.asarray(lane_idx))
+            jnp.asarray(sub_keys), jnp.asarray(mask))
         now = self._now()
         for rs, snap, lane in batch:
             rs.status, rs.lane = Status.RUNNING, lane
@@ -759,38 +771,43 @@ class Scheduler:
 
     # --------------------------------------------------------- admission
 
-    def _pack_prompts(self, batch: List[RequestState],
+    def _pack_prompts(self, slots: List[Tuple[int, RequestState]],
                       skip_chunks: Optional[Dict[int, int]] = None):
         """Pack ragged prompts into one padded chunk grid:
         chunks [n_chunks, B, C] + per-request valid matrix
         [n_chunks, B] (full chunks, then each request's tail, then
         zeros — zero-chunks freeze that row, see prefill_chunk_loop).
-        The batch dim is ALWAYS padded to n_lanes with all-zero-valid
-        rows (frozen end-to-end, then dropped at the scatter).
-        Per-row `skip_chunks` drops each request's already-cached
-        prefix chunks (a prefix-cache hit prefills only its novel
-        suffix; the cached slab's per-lane clock makes positions
-        continue where the prefix left off). The chunk axis is rounded
-        UP to the next POWER-OF-TWO bucket with all-zero-valid tail
-        chunks — the prefill mirror of the decode drain-split buckets
-        — so the suffix-length diversity prefix reuse creates costs
-        O(log2 max_prompt_chunks) admission-closure compiles, never
-        one per distinct length (and never one per admission size k,
-        which varies freely under churn)."""
+        The batch dim is the full n_lanes and the rows are
+        LANE-ALIGNED: `slots` maps each admitting request to its
+        assigned lane and its chunks land at row == lane (all other
+        lanes ride as all-zero-valid frozen rows), so the admission
+        closure installs by [B] mask with no index scatter — the
+        shard-local admission contract (docs/serving.md §Sharded
+        serving). Per-LANE `skip_chunks` drops each request's
+        already-cached prefix chunks (a prefix-cache hit prefills only
+        its novel suffix; the cached slab's per-lane clock makes
+        positions continue where the prefix left off). The chunk axis
+        is rounded UP to the next POWER-OF-TWO bucket with
+        all-zero-valid tail chunks — the prefill mirror of the decode
+        drain-split buckets — so the suffix-length diversity prefix
+        reuse creates costs O(log2 max_prompt_chunks)
+        admission-closure compiles, never one per distinct length (and
+        never one per admission size k, which varies freely under
+        churn)."""
         C = self.serve.prefill_chunk
-        per = []
-        for i, rs in enumerate(batch):
+        per = {}
+        for lane, rs in slots:
             ch, nv = _chunk_prompt(rs.request.prompt, C)
-            d = skip_chunks.get(i, 0) if skip_chunks else 0
-            per.append((ch[d:], nv[d:]))
-        n_chunks = max(ch.shape[0] for ch, _ in per)
+            d = skip_chunks.get(lane, 0) if skip_chunks else 0
+            per[lane] = (ch[d:], nv[d:])
+        n_chunks = max(ch.shape[0] for ch, _ in per.values())
         n_chunks = 1 << (n_chunks - 1).bit_length()
         self.prefill_bucket_lengths.add(n_chunks)
         chunks = np.zeros((n_chunks, self.n_lanes, C), np.int32)
         n_valid = np.zeros((n_chunks, self.n_lanes), np.int32)
-        for i, (ch, nv) in enumerate(per):
-            chunks[: ch.shape[0], i] = ch
-            n_valid[: nv.shape[0], i] = nv
+        for lane, (ch, nv) in per.items():
+            chunks[: ch.shape[0], lane] = ch
+            n_valid[: nv.shape[0], lane] = nv
         return jnp.asarray(chunks), jnp.asarray(n_valid)
 
     def _pack_memory(self, slots: Dict[int, RequestState]):
@@ -860,40 +877,38 @@ class Scheduler:
         return hits, caps
 
     def _install_prefix(self, batch: List[Tuple[object, int]]) -> None:
-        """Interleaved hit path: ONE insert_lanes dispatch scatters the
-        k cached prefix slabs into their freshly assigned lanes before
-        the mixed segments stream each request's suffix chunks (phased
-        hits ride inside the admission dispatch instead — zero extra
-        cost there). Lane operand padded to n_lanes as usual (pad rows
-        scatter out of bounds). tok/keys are NOT touched: the mixed
-        scan writes both at the lane's finish transition."""
-        rows = [entry.state for entry, _ in batch]
-        sub = jax.tree.map(jnp.asarray, _stack_rows(rows, self.n_lanes))
-        lane_idx = np.full(self.n_lanes, self.n_lanes, np.int32)
-        lane_idx[: len(batch)] = [lane for _, lane in batch]
+        """Interleaved hit path: ONE install dispatch where-selects the
+        k cached prefix slabs (stacked lane-aligned) into their freshly
+        assigned lanes before the mixed segments stream each request's
+        suffix chunks (phased hits ride inside the admission dispatch
+        instead — zero extra cost there). tok/keys are NOT touched: the
+        mixed scan writes both at the lane's finish transition."""
+        rows = {lane: entry.state for entry, lane in batch}
+        sub = jax.tree.map(jnp.asarray,
+                           _stack_lane_rows(rows, self.n_lanes))
+        mask = np.zeros(self.n_lanes, bool)
+        mask[[lane for _, lane in batch]] = True
         self.eng.dispatch_count += 1
         self.n_prefix_installs += 1
         self.state = self._prefix_install(self.state, sub,
-                                          jnp.asarray(lane_idx))
+                                          jnp.asarray(mask))
 
     def _capture_lanes(self, lanes: List[int]) -> None:
         """Interleaved capture path: the schedule held these lanes at
         their capture boundary (next_chunk == capture_at), so their
         current state IS the boundary prefix state — ONE batched
-        extract dispatch gathers the retained slabs, each is inserted
-        into the trie under its chunk-aligned key, and clearing
-        capture_key unblocks the remaining suffix chunks for the next
-        segment's schedule. Lane operand padded as in _swap_out."""
-        idx = np.full(self.n_lanes, lanes[0], np.int32)
-        idx[: len(lanes)] = lanes
+        extract dispatch commits the full lane state (identity program,
+        as in _swap_out), each boundary lane's row is inserted into the
+        trie under its chunk-aligned key, and clearing capture_key
+        unblocks the remaining suffix chunks for the next segment's
+        schedule."""
         self.eng.dispatch_count += 1
         self.n_prefix_extracts += 1
         sub, _, _ = jax.device_get(
-            self._extract(self.state, self.tok, self.keys,
-                          jnp.asarray(idx)))
-        for i, lane in enumerate(lanes):
+            self._extract(self.state, self.tok, self.keys))
+        for lane in lanes:
             pf = self.lane_prefill[lane]
-            self._pc.insert(pf.capture_key, _snap_row(sub, i))
+            self._pc.insert(pf.capture_key, _snap_row(sub, lane))
             pf.capture_key = None
 
     def _release_prefix(self, rid: int) -> None:
@@ -980,8 +995,8 @@ class Scheduler:
 
     def _admit(self) -> int:
         """Phased admission (PR 3): fill free lanes from the queue —
-        the whole admission batch (ragged prefill, first tokens, lane
-        scatter) is ONE dispatch however many requests it packs, but
+        the whole admission batch (ragged prefill, first tokens, masked
+        lane install) is ONE dispatch however many requests it packs, but
         decode lanes sit idle while it runs. Snapshot-holding requests
         are restored by ONE resume dispatch instead (no re-prefill).
         Prefix-cache rounds stay ONE dispatch too: hit rows enter the
@@ -999,35 +1014,44 @@ class Scheduler:
         k = len(fresh)
         hits, caps = ({}, {})
         if self._pc is not None:
-            hits, caps = self._probe_prefix(batch)
+            hits_b, caps_b = self._probe_prefix(batch)
+            # _probe_prefix keys by batch row; every device operand
+            # below is LANE-ALIGNED, so remap the keys to lanes
+            hits = {lanes[i]: e for i, e in hits_b.items()}
+            caps = {lanes[i]: c for i, c in caps_b.items()}
         C = self.serve.prefill_chunk
-        skip = {i: e.n_tokens // C for i, e in hits.items()} or None
-        chunks, n_valid = self._pack_prompts(batch, skip_chunks=skip)
-        # pad rows scatter to index n_lanes: OUT OF BOUNDS, so jax
-        # drops them (the default scatter mode) — no lane is touched
-        lane_idx = np.full(self.n_lanes, self.n_lanes, np.int32)
-        lane_idx[:k] = lanes
-        seeds = [rs.request.seed for rs in batch] + [0] * (self.n_lanes - k)
+        skip = {l: e.n_tokens // C for l, e in hits.items()} or None
+        chunks, n_valid = self._pack_prompts(list(zip(lanes, batch)),
+                                             skip_chunks=skip)
+        # [B] admission mask: non-admitting lanes keep their state
+        # through the where-select install — no index scatter, so the
+        # program stays shard-local under a mesh
+        mask = np.zeros(self.n_lanes, bool)
+        mask[lanes] = True
+        seeds = [0] * self.n_lanes
+        for rs, lane in fresh:
+            seeds[lane] = rs.request.seed
         self.eng.dispatch_count += 1
         self.n_prefill_rounds += 1
         args = (self.state, self.tok, self.keys, chunks, n_valid,
-                jnp.asarray(_prng_keys(seeds)), jnp.asarray(lane_idx))
+                jnp.asarray(_prng_keys(seeds)), jnp.asarray(mask))
         if self.mem_key is not None:
-            # sub-state row i holds batch[i]; its memory rides the same
-            # rows and is installed inside the same single dispatch
-            args += self._pack_memory(dict(enumerate(batch)))
+            # sub-state row `lane` holds that lane's request; its
+            # memory rides the same rows and is installed inside the
+            # same single dispatch
+            args += self._pack_memory({lane: rs for rs, lane in fresh})
             self.state, self.tok, self.keys = self._admit_fn(*args)
         elif hits or caps:
             capture = np.zeros(self.n_lanes, np.int32)
-            for i, (cap_rel, _) in caps.items():
-                capture[i] = cap_rel
+            for l, (cap_rel, _) in caps.items():
+                capture[l] = cap_rel
             if hits:
-                # hit rows start from their cached slab (its per-lane
+                # hit lanes start from their cached slab (its per-lane
                 # clock already at the prefix boundary); the rest from
                 # a fresh host row — one stacked sub0 operand
-                rows = [hits[i].state if i in hits
+                rows = [hits[l].state if l in hits
                         else self.eng.fresh_lane_row()
-                        for i in range(self.n_lanes)]
+                        for l in range(self.n_lanes)]
                 sub0 = jax.tree.map(jnp.asarray,
                                     _stack_rows(rows, self.n_lanes))
                 (self.state, self.tok, self.keys,
@@ -1039,8 +1063,8 @@ class Scheduler:
                                                 jnp.asarray(capture))
             if caps:
                 snap_host = jax.device_get(snap)
-                for i, (_, key) in caps.items():
-                    self._pc.insert(key, _snap_row(snap_host, i))
+                for l, (_, key) in caps.items():
+                    self._pc.insert(key, _snap_row(snap_host, l))
         else:
             self.state, self.tok, self.keys = self._admit_fn(*args)
         now = self._now()

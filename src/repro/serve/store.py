@@ -83,6 +83,14 @@ _MANIFEST = "manifest.json"
 # against live device state) and a None "layers" explicitly (None has
 # no leaves, so flatten drops it — the manifest carries a has_layers
 # flag).
+#
+# Sharding-invariance contract (PR 10): snapshot leaves arrive as host
+# numpy arrays — the scheduler's `jax.device_get` on a mesh-sharded
+# decode state assembles each leaf into the FULL logical array before
+# it reaches this module. Slab bytes, flatten order, crcs and the
+# manifest are therefore byte-identical whether the state was sharded
+# or single-device, and a session parked under one mesh revives under
+# another (tests/test_shard_serve.py pins the round-trip).
 
 def _path_json(path) -> List[List[Any]]:
     out = []

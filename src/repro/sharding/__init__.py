@@ -5,6 +5,8 @@ from repro.sharding.rules import (
     describe,
     fsdp_axes,
     get_cp_mesh,
+    lane_operand_sharding,
+    lane_operand_spec,
     param_shardings,
     param_spec,
     set_cp_mesh,
@@ -17,7 +19,8 @@ from repro.sharding.rules import (
 
 __all__ = [
     "attn_tp_flags", "batch_shardings", "batch_spec", "describe", "fsdp_axes",
-    "get_cp_mesh", "param_shardings", "param_spec", "pick",
+    "get_cp_mesh", "lane_operand_sharding", "lane_operand_spec",
+    "param_shardings", "param_spec", "pick",
     "replicated", "set_cp_mesh",
     "state_shardings", "state_spec", "train_state_shardings",
 ]

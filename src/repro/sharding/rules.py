@@ -257,11 +257,23 @@ def _cache_dims(mesh: Mesh, b, hkv, m):
 
 def state_spec(mesh: Mesh, path_str: str, shape) -> P:
     """Decode/prefill state leaves. Layer-stacked leaves carry extra
-    leading dims; rules are right-aligned."""
+    leading dims; rules are right-aligned.
+
+    Covers EVERY leaf `T.init_decode_state` can produce (audited against
+    `jax.eval_shape` per registered config by tests/test_sharding.py):
+    bounded caches (k/v/beta/pos/aux), cross-memory slabs (xk/xv) and
+    their per-lane valid lengths (mem_len), recurrent/ssm tails (h/conv)
+    and the per-lane clock (t). Falling through to P() is reserved for
+    genuinely replicated leaves — an unmatched per-lane leaf is a drift
+    bug, not a default."""
     n = len(shape)
     if n == 0:
         return P()
     key = path_str.rsplit("/", 1)[-1]
+    if key in ("t", "mem_len"):                 # [.., B] per-lane scalars
+        fsdp = fsdp_axes(mesh)
+        b = pick(mesh, shape[-1], fsdp)
+        return P(*([None] * (n - 1)), b)
     if key in ("k", "v"):                       # [.., B, Hkv, M, Dh]
         if n < 4:
             return P()
@@ -281,19 +293,23 @@ def state_spec(mesh: Mesh, path_str: str, shape) -> P:
         s = None if h is not None else pick(mesh, shape[-3], "model",
                                             used=(b,))
         return P(*([None] * (n - 4)), b, s, h, None)
-    if key == "h":                              # [.., B, W] | [.., B, di, n]
+    if key == "h":        # griffin [(R,) B, W] | mamba [(R,) B, di, n]
+        # Rank alone cannot split stacked-griffin [R, B, W] from
+        # unstacked-mamba [B, di, n]; the PATH can — layer-stacked
+        # leaves live under "layers/" (lane dim 1), tail leaves are
+        # unstacked (lane dim 0). Either way the TP channel dim (W /
+        # d_inner) sits immediately after the lane dim.
         fsdp = fsdp_axes(mesh)
-        b_dim = -2 if n >= 2 else None
-        # mamba h is [B, di, n]: channel dim is second-to-last.
-        if path_str.endswith("h") and n >= 3:
-            b = pick(mesh, shape[-3], fsdp)
-            c = pick(mesh, shape[-2], "model", used=(b,))
-            return P(*([None] * (n - 3)), b, c, None)
-        if n >= 2:
-            b = pick(mesh, shape[-2], fsdp)
-            c = pick(mesh, shape[-1], "model", used=(b,))
-            return P(*([None] * (n - 2)), b, c)
-        return P()
+        lane = 1 if path_str.startswith("layers") else 0
+        if n < lane + 2:
+            return P()
+        dims = [None] * n
+        b = pick(mesh, shape[lane], fsdp)
+        dims[lane] = b
+        dims[lane + 1] = pick(mesh, shape[lane + 1], "model", used=(b,))
+        while dims and dims[-1] is None:
+            dims.pop()
+        return P(*dims)
     if key == "conv":                           # [.., B, W-1, C]
         if n < 3:
             return P()
@@ -309,6 +325,33 @@ def state_shardings(mesh: Mesh, state):
         return NamedSharding(mesh, state_spec(mesh, _path_str(path),
                                               leaf.shape))
     return jax.tree_util.tree_map_with_path(one, state)
+
+
+# ----------------------------------------------------- serving operands
+
+
+def lane_operand_spec(mesh: Mesh, shape, lane_axis: int = 0) -> P:
+    """Scheduler closure operands that carry the lane/batch axis at
+    `lane_axis` — per-lane bookkeeping (tok/keys/active/n_emitted/
+    max_new/eos/lane masks, spec history, health flags), chunk grids
+    [n_chunks, B, C] (lane_axis=1) and cross-memory slabs [B, S, feat]:
+    the lane axis shards over the combined data axes (divisibility-
+    guarded — a non-dividing lane count degrades to replication, it
+    never fails), every other dim is replicated. The "model" axis never
+    appears here: these operands are broadcast to every tensor-parallel
+    shard of a lane group."""
+    fsdp = fsdp_axes(mesh)
+    dims = [None] * len(shape)
+    if shape:
+        dims[lane_axis] = pick(mesh, shape[lane_axis], fsdp)
+    while dims and dims[-1] is None:
+        dims.pop()
+    return P(*dims)
+
+
+def lane_operand_sharding(mesh: Mesh, shape,
+                          lane_axis: int = 0) -> NamedSharding:
+    return NamedSharding(mesh, lane_operand_spec(mesh, shape, lane_axis))
 
 
 # -------------------------------------------------------- train bundles

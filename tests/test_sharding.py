@@ -1,26 +1,20 @@
 """Sharding-rule unit tests: divisibility guards, axis allocation, and
 spec shapes — pure metadata, no multi-device runtime needed (the real
-meshes are exercised by the dry-run)."""
+meshes are exercised by the dry-run and tests/test_shard_serve.py)."""
 import jax
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from conftest import abstract_mesh
+from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config
+from repro.configs import ARCH_IDS, get_config
 from repro.launch.specs import decode_state_shapes, model_shapes
-from repro.sharding import (batch_spec, param_shardings, param_spec, pick,
-                            state_spec, state_shardings)
+from repro.models import transformer as T
+from repro.sharding import (batch_spec, lane_operand_spec, param_shardings,
+                            param_spec, pick, state_spec, state_shardings)
 
-
-def fake_mesh(shape, axes):
-    """Abstract mesh over fake devices (never used for execution)."""
-    devs = np.array(jax.devices() * int(np.prod(shape)))[
-        : int(np.prod(shape))].reshape(shape)
-    return Mesh(devs, axes)
-
-
-MESH1 = fake_mesh((16, 16), ("data", "model"))
-MESH2 = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+MESH1 = abstract_mesh((16, 16), ("data", "model"))
+MESH2 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_pick_guards_divisibility():
@@ -95,7 +89,13 @@ def test_state_spec_scalars_and_recurrent():
     s = state_spec(MESH1, "layers/0/conv", (16, 128, 3, 8192))
     assert s == P(None, "data", None, "model")
     s = state_spec(MESH1, "layers/0/h", (16, 128, 8192, 16))  # mamba
-    assert s == P(None, "data", "model", None)
+    assert s == P(None, "data", "model")
+    # stacked griffin h [R, B, W]: lane dim is 1, NOT right-aligned
+    # (the drift audit below caught the old rank-only rule sharding the
+    # repeat dim as batch and the lane dim over "model")
+    assert state_spec(MESH1, "layers/0/h", (8, 96, 2560)) == \
+        P(None, "data", "model")
+    assert state_spec(MESH1, "tail/0/h", (96, 2560)) == P("data", "model")
 
 
 @pytest.mark.parametrize("arch", ["qwen2.5-14b", "mixtral-8x7b",
@@ -135,3 +135,92 @@ def test_big_param_leaves_are_sharded():
         if per_dev > 64 * 2**20 and sh.spec == P():
             bad.append(("/".join(str(p) for p in path), leaf.shape))
     assert not bad, bad
+
+
+# ------------------------------------------------- decode-state drift
+
+# Every leaf name init_decode_state can emit; state_spec must have an
+# explicit rule for each (its P() fallback is reserved for scalars).
+_STATE_KEYS = {"t", "mem_len", "k", "v", "beta", "pos", "aux",
+               "xk", "xv", "h", "conv"}
+# Lane count for the drift audit: divides both prod data-axis products
+# (16 and 2*16) and collides with no other state dim (head/slot/window
+# counts in the registered configs are never 96).
+_NL = 96
+
+
+def _leaf_key(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [MESH1, MESH2],
+                         ids=["single_pod", "multi_pod"])
+def test_state_shardings_cover_real_decode_state(arch, mesh):
+    """DRIFT GUARD for the sharded serving path: state_shardings must
+    cover the EXACT pytree `T.init_decode_state` produces for every
+    registered config — not the launch/specs.decode_state_shapes
+    approximation — and must put the combined data axes on the LANE dim
+    of every per-lane leaf (Engine.lane_closures stamps these trees as
+    in/out shardings; an unmatched or misplaced leaf there means a
+    resharding collective in the decode hot loop)."""
+    cfg = get_config(arch)
+    state = jax.eval_shape(lambda: T.init_decode_state(cfg, _NL, 256))
+    ss = state_shardings(mesh, state)
+    assert jax.tree.structure(ss) == jax.tree.structure(state)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    expect_lane = data_axes if len(data_axes) > 1 else data_axes[0]
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    specs = jax.tree_util.tree_flatten_with_path(ss)[0]
+    for (path, leaf), (_, sh) in zip(leaves, specs):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        key = _leaf_key(path)
+        assert key in _STATE_KEYS, (
+            f"{arch}: state leaf {name} {leaf.shape} has no state_spec "
+            f"rule — init_decode_state drifted ahead of sharding/rules")
+        lane_dims = [i for i, d in enumerate(leaf.shape) if d == _NL]
+        assert len(lane_dims) == 1, (arch, name, leaf.shape)
+        spec = tuple(sh.spec) + (None,) * (len(leaf.shape) - len(sh.spec))
+        assert spec[lane_dims[0]] == expect_lane, (
+            f"{arch}: {name} {leaf.shape} lane dim {lane_dims[0]} got "
+            f"{spec[lane_dims[0]]!r}, want {expect_lane!r}")
+
+
+def test_decode_state_shapes_match_real_init():
+    """launch/specs.decode_state_shapes (used by the dry-run memory
+    model) must not drift from the real init either."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        real = jax.eval_shape(lambda: T.init_decode_state(cfg, _NL, 256))
+        spec = decode_state_shapes(cfg, _NL, 256)
+        assert jax.tree.structure(real) == jax.tree.structure(spec), arch
+        for a, b in zip(jax.tree.leaves(real), jax.tree.leaves(spec)):
+            assert a.shape == b.shape and a.dtype == b.dtype, (
+                arch, a.shape, b.shape)
+
+
+# ------------------------------------------------- serving lane operands
+
+
+def test_lane_operand_spec_shards_lane_axis_only():
+    assert lane_operand_spec(MESH1, (128,)) == P("data")
+    assert lane_operand_spec(MESH1, (128, 2)) == P("data")
+    # chunk grids [n_chunks, B, C]: lane axis rides second
+    assert lane_operand_spec(MESH1, (3, 128, 64), lane_axis=1) == \
+        P(None, "data")
+    assert lane_operand_spec(MESH2, (96, 2)) == P(("pod", "data"))
+    # non-dividing lane count degrades to replication, never fails
+    assert lane_operand_spec(MESH1, (10,)) == P()
+    assert lane_operand_spec(MESH1, ()) == P()
+
+
+def test_lane_operand_never_uses_model_axis():
+    for shape, ax in [((128,), 0), ((256, 7), 0), ((2, 128, 9), 1)]:
+        spec = lane_operand_spec(MESH2, shape, lane_axis=ax)
+        flat = [a for d in spec for a in
+                ((d,) if isinstance(d, str) else (d or ()))]
+        assert "model" not in flat, (shape, spec)
